@@ -1,0 +1,34 @@
+"""Table 4 — 16-bit-FPU training matches 32-bit with SR / Kahan.
+
+LM (AdamW, BERT-stand-in) + DLRM (SGD) under fp32 / standard / SR / Kahan.
+derived = final loss (LM) or AUC (DLRM).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, train_dlrm, train_tiny_lm
+
+POLICIES = ("fp32", "bf16_standard", "bf16_sr", "bf16_kahan")
+
+
+def run():
+    lm = {}
+    for pol in POLICIES:
+        _, final, us = train_tiny_lm(pol, steps=400, lr=1e-4)
+        lm[pol] = final
+        row(f"table4_lm_{pol}", us, f"final_loss={final:.4f}")
+    dl = {}
+    for pol in POLICIES:
+        losses, auc, _ = train_dlrm(pol, steps=400)
+        dl[pol] = auc
+        row(f"table4_dlrm_{pol}", 0.0, f"auc={auc:.4f}")
+    row("table4_lm_gap_sr_vs_fp32", 0.0, f"{lm['bf16_sr'] - lm['fp32']:+.4f}")
+    row("table4_lm_gap_kahan_vs_fp32", 0.0, f"{lm['bf16_kahan'] - lm['fp32']:+.4f}")
+    row("table4_lm_gap_standard_vs_fp32", 0.0,
+        f"{lm['bf16_standard'] - lm['fp32']:+.4f}")
+    row("table4_dlrm_gap_sr_vs_fp32", 0.0, f"{dl['bf16_sr'] - dl['fp32']:+.4f}")
+    row("table4_dlrm_gap_kahan_vs_fp32", 0.0,
+        f"{dl['bf16_kahan'] - dl['fp32']:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,20 @@
+"""Fig 9 — fraction of non-zero weight updates cancelled by nearest
+rounding, measured on the DLRM embedding tables over training.
+derived = cancellation fraction early vs late (should rise)."""
+from __future__ import annotations
+
+from benchmarks.common import row, train_dlrm
+
+
+def run():
+    _, auc, frac = train_dlrm("bf16_standard", steps=300, lr=1.0,
+                              lr_decay=True, record_cancellation=True)
+    early = sum(frac[:3]) / 3
+    late = sum(frac[-3:]) / 3
+    row("fig9_dlrm_cancel_frac_early", 0.0, f"{early:.3f}")
+    row("fig9_dlrm_cancel_frac_late", 0.0, f"{late:.3f}")
+    row("fig9_cancel_rises", 0.0, str(late >= early))
+
+
+if __name__ == "__main__":
+    run()

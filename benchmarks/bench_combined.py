@@ -1,0 +1,15 @@
+"""Fig 11 — SR and Kahan applied simultaneously. derived = final metric."""
+from __future__ import annotations
+
+from benchmarks.common import row, train_dlrm, train_tiny_lm
+
+
+def run():
+    _, final, us = train_tiny_lm("bf16_sr_kahan", steps=400, lr=1e-4)
+    row("fig11_lm_sr_kahan", us, f"final_loss={final:.4f}")
+    _, auc, _ = train_dlrm("bf16_sr_kahan", steps=400)
+    row("fig11_dlrm_sr_kahan", 0.0, f"auc={auc:.4f}")
+
+
+if __name__ == "__main__":
+    run()

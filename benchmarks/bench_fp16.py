@@ -1,0 +1,61 @@
+"""Fig 12 — Float16 (e5m10) instead of BFloat16: the dynamic-range failure.
+
+Two measurements: (1) a direct range probe (large-target least squares:
+residuals overflow fp16's 65504 max -> divergence; bf16's e8 range copes)
+— the paper's mechanism, reproduced exactly; (2) the small LM, where this
+shallow synthetic task fits inside fp16's range so its extra mantissa
+wins slightly — reported honestly; at production depth/scale activations
+leave fp16's range, which is what (1) demonstrates."""
+from __future__ import annotations
+
+from benchmarks.common import row, train_tiny_lm
+
+
+def _range_probe(fmt_name: str) -> float:
+    """lstsq with large targets: residuals overflow fp16's 65504 max but
+    sit comfortably in bf16's e8 range — the paper's core fp16 failure."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import FORMATS, round_nearest
+    fmt = FORMATS[fmt_name]
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (256, 10)) * 20.0
+    w_star = jax.random.uniform(jax.random.PRNGKey(1), (10,), minval=100., maxval=500.)
+    y = X @ w_star
+    w = jnp.zeros((10,))
+
+    @jax.jit
+    def step(w, i):
+        idx = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(2), i), (), 0, 256)
+        r = round_nearest(X[idx] @ w - y[idx], fmt)   # activation in fmt
+        g = round_nearest(r * X[idx], fmt)            # grad in fmt
+        return round_nearest(w - 1e-5 * g, fmt)
+
+    for i in range(3000):
+        w = step(w, i)
+    return float(jnp.mean((X @ w - y) ** 2))
+
+
+def run():
+    mse_bf = _range_probe("bf16")
+    mse_fp = _range_probe("fp16")
+    row("fig12_range_probe_bf16", 0.0, f"mse={mse_bf:.3e}")
+    row("fig12_range_probe_fp16", 0.0, f"mse={mse_fp:.3e}")
+    import math
+    verdict = ("fp16_DIVERGED(overflow->NaN);bf16_trained"
+               if math.isnan(mse_fp) or mse_fp > 1e3 * mse_bf else "no-gap")
+    row("fig12_range_verdict", 0.0, verdict)
+    res = {}
+    for pol in ("bf16_sr", "fp16_sr", "bf16_kahan", "fp16_kahan"):
+        _, final, us = train_tiny_lm(pol, steps=250, init_scale=0.05, lr=1e-2)
+        res[pol] = final
+        row(f"fig12_lm_{pol}", us, f"final_loss={final:.4f}")
+    row("fig12_fp16_minus_bf16_sr", 0.0,
+        f"{res['fp16_sr'] - res['bf16_sr']:+.4f}")
+    row("fig12_fp16_minus_bf16_kahan", 0.0,
+        f"{res['fp16_kahan'] - res['bf16_kahan']:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

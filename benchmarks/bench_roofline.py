@@ -1,0 +1,36 @@
+"""§Roofline — renders the dry-run artifact table (reads artifacts/dryrun).
+
+One row per (arch × shape × mesh): the three roofline terms, dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPS. Run the sweep first:
+``python -m repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run():
+    if not ART.exists():
+        row("roofline_missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    for p in sorted(ART.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("skipped"):
+            row(f"roofline_{p.stem}", 0.0, f"SKIP:{d['skipped'][:40]}")
+            continue
+        r = d["roofline"]
+        step_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        useful = d.get("useful_flops_ratio")
+        row(f"roofline_{p.stem}", step_us,
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+            f"memory_s={r['memory_s']:.3e};collective_s={r['collective_s']:.3e};"
+            f"useful={useful:.3f}" if useful is not None else "useful=n/a")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,17 @@
+"""Fig 10 — below 16-bit (bf14/bf12/bf10, 8 exponent bits kept).
+derived = final loss per format with SR and with Kahan."""
+from __future__ import annotations
+
+from benchmarks.common import row, train_dlrm
+
+
+def run():
+    for fam in ("bf14", "bf12", "bf10"):
+        for tech in ("sr", "kahan"):
+            losses, auc, _ = train_dlrm(f"{fam}_{tech}", steps=300)
+            row(f"fig10_dlrm_{fam}_{tech}", 0.0,
+                f"auc={auc:.4f};final_loss={sum(losses[-10:])/10:.4f}")
+
+
+if __name__ == "__main__":
+    run()

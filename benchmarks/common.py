@@ -1,0 +1,121 @@
+"""Shared benchmark utilities: timing + CSV rows + small train harnesses."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QArith, get_policy
+from repro.models import registry as R
+from repro.optim import adamw, constant, sgd
+from repro.optim.base import init_params_for_policy
+from repro.train.step import make_train_step
+from repro.train.train_state import make_train_state
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us_per_call: float, derived):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def train_tiny_lm(policy_name: str, *, steps: int = 200, seed: int = 0,
+                  lr: float = 3e-3, batch: int = 8, seq: int = 32,
+                  init_scale: float | None = None):
+    """Train the reduced qwen2.5 config on the synthetic LM stream.
+
+    Returns (losses, final_eval_loss, us_per_step)."""
+    from repro.data.synthetic import lm_batches
+    policy = get_policy(policy_name)
+    cfg = R.get_config("qwen2.5-3b").reduced()
+    params = R.init(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    if init_scale is not None:
+        params = jax.tree_util.tree_map(lambda w: w * init_scale, params)
+    params = init_params_for_policy(params, policy)
+    opt = adamw(policy, b2=0.997)
+    state = make_train_state(params, opt)
+    step = jax.jit(make_train_step(cfg, policy, opt, constant(lr),
+                                   attn_chunk=8))
+    losses = []
+    t0 = time.perf_counter()
+    for i, b in enumerate(lm_batches(cfg.vocab, batch, seq, seed=seed)):
+        if i >= steps:
+            break
+        state, m = step(state, b, seed)
+        losses.append(float(m["loss"]))
+    dt_us = (time.perf_counter() - t0) / max(len(losses), 1) * 1e6
+    final = sum(losses[-10:]) / 10
+    return losses, final, dt_us
+
+
+def train_dlrm(policy_name: str, *, steps: int = 300, seed: int = 0,
+               lr: float = 0.1, kahan_fraction: float | None = None,
+               record_cancellation: bool = False, lr_decay: bool = False):
+    """Paper's DLRM on the synthetic click model → (losses, auc, extras)."""
+    import numpy as np
+    from repro.data.synthetic import dlrm_batches
+    from repro.models.dlrm import DLRM_KAGGLE_SMALL, dlrm_apply, dlrm_init
+    policy = get_policy(policy_name)
+    qa = QArith(policy)
+    params_f32 = dlrm_init(jax.random.PRNGKey(seed), DLRM_KAGGLE_SMALL)
+    params = init_params_for_policy(params_f32, policy)
+    opt = sgd(policy, momentum=0.0)
+    state = opt.init(params)
+    cancel_frac = []
+
+    @jax.jit
+    def step(params, state, batch, i):
+        def loss_fn(p):
+            logits = dlrm_apply(qa, p, batch["dense"], batch["sparse"])
+            y = batch["labels"]
+            return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        lr_i = jnp.where(jnp.bool_(lr_decay),
+                         lr * (1.0 - i.astype(jnp.float32) / steps), lr)
+        p2, s2 = opt.update(g, state, params, step=i,
+                            key=jax.random.PRNGKey(i), lr=lr_i)
+        return p2, s2, loss, g
+
+    losses = []
+    gen = dlrm_batches(DLRM_KAGGLE_SMALL, 128, seed=seed + 1)
+    val = [next(gen) for _ in range(4)]
+    for i, batch in enumerate(gen):
+        if i >= steps:
+            break
+        new_params, state, loss, g = step(params, state, batch, jnp.int32(i))
+        if record_cancellation and i % 10 == 0:
+            old_t = params["tables"].astype(jnp.float32)
+            new_t = new_params["tables"].astype(jnp.float32)
+            g_t = g["tables"].astype(jnp.float32)
+            nz = g_t != 0
+            cancelled = nz & (old_t == new_t)
+            cancel_frac.append(float(cancelled.sum() / jnp.maximum(nz.sum(), 1)))
+        params = new_params
+        losses.append(float(loss))
+    # AUC on held-out batches
+    scores, labels = [], []
+    for b in val:
+        s = dlrm_apply(qa, params, b["dense"], b["sparse"])
+        scores.append(np.asarray(s, np.float32))
+        labels.append(np.asarray(b["labels"]))
+    s = np.concatenate(scores)
+    y = np.concatenate(labels)
+    order = np.argsort(s)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(s) + 1)
+    n1, n0 = y.sum(), (1 - y).sum()
+    auc = (ranks[y == 1].sum() - n1 * (n1 + 1) / 2) / max(n1 * n0, 1)
+    return losses, float(auc), cancel_frac

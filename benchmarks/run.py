@@ -1,0 +1,47 @@
+"""Benchmark runner — one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (shared convention).
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--only fig2,table4]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = [
+    ("fig2_theory", "benchmarks.bench_theory"),
+    ("table3_bottleneck", "benchmarks.bench_bottleneck"),
+    ("table4_accuracy", "benchmarks.bench_accuracy"),
+    ("fig5_tradeoff", "benchmarks.bench_tradeoff"),
+    ("fig9_cancellation", "benchmarks.bench_cancellation"),
+    ("fig10_sub16", "benchmarks.bench_sub16"),
+    ("fig11_combined", "benchmarks.bench_combined"),
+    ("fig12_fp16", "benchmarks.bench_fp16"),
+    ("appB_kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section prefixes to run")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    for name, module in SECTIONS:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        mod = __import__(module, fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # keep the suite going; report the failure
+            print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name}_ERROR,0.0,{type(e).__name__}")
+        print(f"# section {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

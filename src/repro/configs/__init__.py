@@ -1,0 +1,4 @@
+"""Architecture configs (one module per assigned arch) + shape grid."""
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeConfig, shape_by_name
+
+__all__ = ["LM_SHAPES", "ModelConfig", "ShapeConfig", "shape_by_name"]

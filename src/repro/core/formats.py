@@ -1,0 +1,258 @@
+"""Floating-point formats and rounding primitives (the paper's numeric core).
+
+Models the paper's BFloat16 FMAC semantics: 16-bit storage/inputs, 32-bit
+accumulation, and a single rounding of the unit output back to 16 bits —
+either *nearest* (round-to-nearest-even, the conventional mode) or
+*stochastic* (the paper's remedy for weight updates).
+
+Two families of formats:
+
+* ``bfloat16`` — native JAX dtype fast path. Nearest rounding is XLA's RNE
+  cast; stochastic rounding uses the integer bit-trick on the f32 carrier
+  (add ``r ~ U[0, 2^16)`` to the raw bits, truncate low 16) — exactly the
+  hardware scheme of De Sa et al. [4] cited by the paper (App. B.1).
+* generic ``FloatFormat(exp_bits, man_bits)`` — f32-carrier simulation used
+  for the paper's sub-16-bit study (Fig 10: bf14/bf12/bf10) and fp16
+  (Fig 12). Values are stored as f32 snapped onto the format's grid.
+
+All quantizers are pure jax-traceable functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FloatFormat", "BF16", "BF14", "BF12", "BF10", "FP16", "FP32",
+    "round_nearest", "round_stochastic", "stochastic_round_bf16",
+    "nearest_representable", "ulp",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """An IEEE-like binary float format with f32-compatible exponent layout.
+
+    ``exp_bits == 8`` formats (bfloat16 and the paper's sub-16-bit variants)
+    share f32's exponent field, so quantization is pure mantissa-bit
+    truncation on the raw f32 bits. ``fp16`` (e5m10) additionally needs
+    range clamping and subnormal handling, which we get by casting through
+    the native float16 grid.
+    """
+
+    name: str
+    exp_bits: int
+    man_bits: int
+
+    @property
+    def shift(self) -> int:
+        # number of low mantissa bits of f32 dropped by this format
+        return 23 - self.man_bits
+
+    @property
+    def machine_eps(self) -> float:
+        return 2.0 ** (-self.man_bits - 1)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    # -- predicates -------------------------------------------------------
+    @property
+    def is_f32_exponent(self) -> bool:
+        return self.exp_bits == 8
+
+    @property
+    def max_finite(self) -> float:
+        if self.is_f32_exponent:
+            # exponent 254 (biased), mantissa all ones at this width
+            man = (2 ** self.man_bits - 1) / 2 ** self.man_bits
+            return float((1.0 + man) * 2.0 ** 127)
+        if self.name == "fp16":
+            return 65504.0
+        raise NotImplementedError(self.name)
+
+
+BF16 = FloatFormat("bf16", 8, 7)
+BF14 = FloatFormat("bf14", 8, 5)
+BF12 = FloatFormat("bf12", 8, 3)
+BF10 = FloatFormat("bf10", 8, 1)
+FP16 = FloatFormat("fp16", 5, 10)
+FP32 = FloatFormat("fp32", 8, 23)
+
+FORMATS = {f.name: f for f in (BF16, BF14, BF12, BF10, FP16, FP32)}
+
+
+def _bits(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def _from_bits(b: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(b.astype(jnp.uint32), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Nearest rounding (RNE)
+# ---------------------------------------------------------------------------
+
+def _round_nearest_e8_impl(x: jax.Array, shift: int) -> jax.Array:
+    """RNE truncation of f32 mantissa (e8 formats). Classic trick: add
+    ``half + (lsb&1)`` before masking = round-half-to-even. NaN/Inf pass
+    through."""
+    b = _bits(x)
+    lsb = (b >> shift) & jnp.uint32(1)
+    rounding_bias = jnp.uint32(2 ** (shift - 1) - 1) + lsb
+    rounded = (b + rounding_bias) & ~jnp.uint32(2 ** shift - 1)
+    out = _from_bits(rounded)
+    # preserve NaN (the bias-add could overflow a NaN mantissa into inf)
+    return jnp.where(jnp.isnan(x), x, out)
+
+
+@functools.lru_cache(maxsize=32)
+def _ste_nearest(shift: int):
+    """Straight-through-estimator wrapper: the bit-level quantizer is
+    built from bitcasts (zero gradient), so simulated-format *training*
+    needs the identity-gradient convention — the same one QPyTorch (the
+    paper's simulator) uses."""
+
+    @jax.custom_jvp
+    def q(x):
+        return _round_nearest_e8_impl(x, shift)
+
+    @q.defjvp
+    def _jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        return q(x), dx
+
+    return q
+
+
+def _round_nearest_e8(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    return _ste_nearest(fmt.shift)(x.astype(jnp.float32))
+
+
+def round_nearest(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """Round-to-nearest-even onto ``fmt``'s grid; result carried in f32."""
+    x = x.astype(jnp.float32)
+    if fmt.name == "fp32":
+        return x
+    if fmt.name == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if fmt.name == "fp16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    return _round_nearest_e8(x, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _ste_stochastic(shift: int):
+    """SR via the integer bit-trick: bits + U[0, 2^shift) then truncate,
+    with a straight-through gradient (see _ste_nearest).
+
+    Within a binade this is exact SR (uniform over the dropped ULP
+    fraction); across binade boundaries the carry into the exponent field
+    produces the correct upper neighbor. This is the hardware scheme the
+    paper cites (shift-register bits added to low mantissa, truncate).
+    """
+
+    @jax.custom_jvp
+    def q(x, noise):
+        b = _bits(x)
+        truncated = (b + noise) & ~jnp.uint32(2 ** shift - 1)
+        out = _from_bits(truncated)
+        # Inf/NaN pass-through (noise add could corrupt the exponent field)
+        return jnp.where(jnp.isfinite(x), out, x)
+
+    @q.defjvp
+    def _jvp(primals, tangents):
+        x, noise = primals
+        dx = tangents[0]
+        return q(x, noise), dx
+
+    return q
+
+
+def _round_stochastic_e8(x: jax.Array, key: jax.Array, fmt: FloatFormat) -> jax.Array:
+    shift = fmt.shift
+    noise = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32) \
+        & jnp.uint32(2 ** shift - 1)
+    return _ste_stochastic(shift)(x.astype(jnp.float32), noise)
+
+
+def _round_stochastic_fp16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """SR onto the float16 grid via explicit neighbors (handles e5 range +
+    subnormals exactly, per the paper's definition of SR)."""
+    x = x.astype(jnp.float32)
+    near = x.astype(jnp.float16)
+    near_f32 = near.astype(jnp.float32)
+    # step one ULP away from x on the f16 grid, on the far side of `near`
+    nb16 = jax.lax.bitcast_convert_type(near, jnp.uint16)
+    is_pos_step = near_f32 < x  # need upper neighbor
+    # ULP step on the int16 lattice: +1 moves away from zero for positives...
+    sign = nb16 & jnp.uint16(0x8000)
+    mag = nb16 & jnp.uint16(0x7FFF)
+    # move magnitude up/down depending on which neighbor we need
+    toward_inf = jnp.where(sign == 0, is_pos_step, ~is_pos_step)
+    mag_next = jnp.where(toward_inf, mag + jnp.uint16(1), jnp.maximum(mag, 1) - jnp.uint16(1))
+    # crossing zero: if mag==0 and we step "down", flip sign to smallest subnormal
+    crosses = (mag == 0) & ~toward_inf
+    sign_next = jnp.where(crosses, sign ^ jnp.uint16(0x8000), sign)
+    mag_next = jnp.where(crosses, jnp.uint16(1), mag_next)
+    other = jax.lax.bitcast_convert_type(sign_next | mag_next, jnp.float16).astype(jnp.float32)
+    lo = jnp.minimum(near_f32, other)
+    hi = jnp.maximum(near_f32, other)
+    denom = hi - lo
+    p_up = jnp.where(denom > 0, (x - lo) / jnp.where(denom > 0, denom, 1.0), 0.0)
+    u = jax.random.uniform(key, shape=x.shape, dtype=jnp.float32)
+    y = jnp.where(u < p_up, hi, lo)
+    exact = near_f32 == x
+    y = jnp.where(exact, near_f32, y)
+    return jnp.where(jnp.isfinite(x), y, x)
+
+
+def round_stochastic(x: jax.Array, key: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """Stochastically round onto ``fmt``'s grid; result carried in f32."""
+    x = x.astype(jnp.float32)
+    if fmt.name == "fp32":
+        return x
+    if fmt.name == "fp16":
+        return _round_stochastic_fp16(x, key)
+    return _round_stochastic_e8(x, key, fmt)
+
+
+def stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """f32 → native bfloat16 with stochastic rounding (fast path)."""
+    return _round_stochastic_e8(x, key, BF16).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+def ulp(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """Distance to the next-larger representable magnitude in ``fmt``."""
+    x = jnp.abs(round_nearest(x, fmt))
+    b = _bits(x)
+    up = _from_bits(b + jnp.uint32(2 ** fmt.shift))
+    return up - x
+
+
+def nearest_representable(value: float, fmt: FloatFormat = BF16, *, below_one: bool = False) -> float:
+    """Nearest value on ``fmt``'s grid; optionally the largest one < 1.
+
+    Used for the paper's β₂ clamp: 0.999 rounds to 1.0 in bf16, so configs
+    ask for the closest representable value strictly below 1 (→ 0.99609375,
+    the paper uses the looser 0.997 which snaps to the same grid point).
+    """
+    v = float(jax.device_get(round_nearest(jnp.float32(value), fmt)))
+    if below_one and v >= 1.0:
+        one = _bits(jnp.float32(1.0))
+        v = float(jax.device_get(_from_bits(one - jnp.uint32(2 ** fmt.shift))))
+    return v

@@ -1,0 +1,121 @@
+"""Precision policies — the paper's Table 2 as a first-class config object.
+
+A :class:`PrecisionPolicy` assigns a format to each tensor class (params,
+optimizer state, activations/gradients) and a rounding rule to the weight
+update. The training stack (models, optimizers, kernels) reads *only* this
+object, so every experiment in the paper is a one-line policy change:
+
+=====================  ========  ===========  ============  ==============
+preset                 params    opt. state   act/grad      weight update
+=====================  ========  ===========  ============  ==============
+``fp32``               fp32      fp32         fp32          exact (RNE f32)
+``mixed``              fp32*     fp32         bf16          exact on master
+``bf16_standard``      bf16      bf16         bf16          nearest (paper's failing baseline)
+``bf16_sr``            bf16      bf16         bf16          stochastic rounding
+``bf16_kahan``         bf16      bf16         bf16          nearest + Kahan compensation
+``bf16_sr_kahan``      bf16      bf16         bf16          stochastic + Kahan (Fig 11)
+``bf16_master``        fp32*     bf16         bf16          exact on master (Table 3 ablation)
+=====================  ========  ===========  ============  ==============
+
+(* master copy: a bf16 working copy is what forward/backward consume.)
+
+Sub-16-bit (Fig 10) / fp16 (Fig 12) variants are built with
+:func:`make_policy` by swapping the storage format.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.formats import FORMATS, BF16, FP32, FloatFormat
+
+__all__ = ["PrecisionPolicy", "get_policy", "make_policy", "PRESETS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str
+    param_format: FloatFormat          # storage format of model weights
+    state_format: FloatFormat          # optimizer states (momentum, v, ...)
+    compute_format: FloatFormat        # activations & gradients
+    update_rounding: str               # "nearest" | "stochastic" | "exact"
+    kahan: bool = False                # Kahan compensation on weight update
+    master_weights: bool = False       # fp32 master copy (mixed / ablation)
+
+    # -- dtype helpers ------------------------------------------------------
+    @property
+    def native(self) -> bool:
+        """True when all storage is native-dtype (bf16/f32): no f32-carrier
+        grid simulation needed in forward/backward."""
+        return (self.compute_format.name in ("bf16", "fp32")
+                and self.param_format.name in ("bf16", "fp32"))
+
+    @property
+    def param_dtype(self):
+        if self.master_weights or self.param_format.name == "fp32":
+            return jnp.float32
+        return jnp.bfloat16 if self.param_format.name == "bf16" else jnp.float32
+
+    @property
+    def compute_dtype(self):
+        if self.compute_format.name == "fp32":
+            return jnp.float32
+        if self.compute_format.name == "bf16":
+            return jnp.bfloat16
+        if self.compute_format.name == "fp16":
+            return jnp.float16
+        return jnp.float32  # simulated grid carried in f32
+
+    @property
+    def state_dtype(self):
+        if self.state_format.name == "fp32":
+            return jnp.float32
+        return jnp.bfloat16 if self.state_format.name == "bf16" else jnp.float32
+
+    def tag(self) -> str:
+        return self.name
+
+
+def make_policy(name: str, *, storage: FloatFormat = BF16,
+                update_rounding: str = "nearest", kahan: bool = False,
+                master_weights: bool = False,
+                compute: FloatFormat | None = None) -> PrecisionPolicy:
+    return PrecisionPolicy(
+        name=name,
+        param_format=FP32 if master_weights else storage,
+        state_format=storage,
+        compute_format=compute or storage,
+        update_rounding=update_rounding,
+        kahan=kahan,
+        master_weights=master_weights,
+    )
+
+
+PRESETS: dict[str, PrecisionPolicy] = {
+    "fp32": PrecisionPolicy("fp32", FP32, FP32, FP32, "exact"),
+    "mixed": PrecisionPolicy("mixed", FP32, FP32, BF16, "exact", master_weights=True),
+    "bf16_standard": make_policy("bf16_standard"),
+    "bf16_sr": make_policy("bf16_sr", update_rounding="stochastic"),
+    "bf16_kahan": make_policy("bf16_kahan", kahan=True),
+    "bf16_sr_kahan": make_policy("bf16_sr_kahan", update_rounding="stochastic", kahan=True),
+    # Table 3 ablation: 16-bit everywhere except exact fp32 weights/updates
+    "bf16_master": PrecisionPolicy("bf16_master", FP32, BF16, BF16, "exact", master_weights=True),
+    # Fig 12: fp16 storage instead of bf16
+    "fp16_sr": make_policy("fp16_sr", storage=FORMATS["fp16"], update_rounding="stochastic"),
+    "fp16_kahan": make_policy("fp16_kahan", storage=FORMATS["fp16"], kahan=True),
+    # Fig 10: sub-16-bit
+    "bf14_sr": make_policy("bf14_sr", storage=FORMATS["bf14"], update_rounding="stochastic"),
+    "bf14_kahan": make_policy("bf14_kahan", storage=FORMATS["bf14"], kahan=True),
+    "bf12_sr": make_policy("bf12_sr", storage=FORMATS["bf12"], update_rounding="stochastic"),
+    "bf12_kahan": make_policy("bf12_kahan", storage=FORMATS["bf12"], kahan=True),
+    "bf10_sr": make_policy("bf10_sr", storage=FORMATS["bf10"], update_rounding="stochastic"),
+    "bf10_kahan": make_policy("bf10_kahan", storage=FORMATS["bf10"], kahan=True),
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown precision policy {name!r}; known: {sorted(PRESETS)}") from None

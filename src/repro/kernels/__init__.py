@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- sr_cast     — stochastic-rounding cast (the HW primitive the paper asks for)
+- fused_adamw — Algorithm 4/5 in one HBM pass (SR / Kahan variants)
+- fused_sgd   — Algorithm 2/3 in one HBM pass
+- qmatmul     — bf16-in / f32-accumulate / round-once FMAC matmul (Table 1)
+
+Validated against ref.py oracles in interpret mode on CPU; BlockSpecs are
+VMEM/MXU-aligned for the TPU target.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.fused_sgd import fused_sgd
+from repro.kernels.qmatmul import qmatmul
+from repro.kernels.sr_cast import sr_cast
+
+__all__ = ["ops", "ref", "fused_adamw", "fused_sgd", "qmatmul", "sr_cast"]

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Auto-select: Pallas (native on TPU, interpret on CPU) with a pure-jnp
+fallback for ragged shapes. These are the entry points the optimizer layer
+can call when ``use_kernels=True``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.fused_sgd import fused_sgd
+from repro.kernels.qmatmul import qmatmul
+from repro.kernels.sr_cast import sr_cast
+
+__all__ = ["sr_cast_op", "qmatmul_op", "adamw_update_op", "sgd_update_op"]
+
+
+@jax.jit
+def sr_cast_op(x: jax.Array, key: jax.Array) -> jax.Array:
+    bits = jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
+    return sr_cast(x, bits)
+
+
+@partial(jax.jit, static_argnames=("stochastic",))
+def qmatmul_op(x, y, key=None, *, stochastic: bool = False):
+    M, K = x.shape
+    N = y.shape[1]
+    bits = (jax.random.bits(key, shape=(M, N), dtype=jnp.uint32)
+            if stochastic else None)
+    if M % 128 or N % 128 or K % 128:
+        return ref.qmatmul_ref(x, y, bits=bits)      # ragged fallback
+    bm = 256 if M % 256 == 0 else 128
+    bn = 256 if N % 256 == 0 else 128
+    bk = 512 if K % 512 == 0 else 128
+    return qmatmul(x, y, bits=bits, bm=bm, bn=bn, bk=bk)
+
+
+@partial(jax.jit, static_argnames=("stochastic", "kahan"))
+def adamw_update_op(w, m, v, g, c, key, scalars, *, stochastic=True,
+                    kahan=False):
+    """scalars = dict(lr,b1,b2,eps,wd,c1,c2) of f32 scalars."""
+    bits = jax.random.bits(key, shape=w.shape, dtype=jnp.uint32)
+    return fused_adamw(w, m, v, g, c=c if kahan else None, bits=bits,
+                       stochastic=stochastic, **scalars)
+
+
+@partial(jax.jit, static_argnames=("stochastic", "kahan"))
+def sgd_update_op(w, m, g, c, key, scalars, *, stochastic=True, kahan=False):
+    """scalars = dict(lr,momentum,wd)."""
+    bits = jax.random.bits(key, shape=w.shape, dtype=jnp.uint32)
+    return fused_sgd(w, m, g, c=c if kahan else None, bits=bits,
+                     stochastic=stochastic, lr=scalars["lr"],
+                     momentum=scalars["momentum"], wd=scalars["wd"])

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: bf16 FMAC matmul (the paper's Table-1 compute unit).
+
+Exactly the unit the paper models: bf16 inputs feed the MXU, partial
+products accumulate in an f32 VMEM scratch across K tiles, and the result
+is rounded ONCE to bf16 on the way out — nearest (conventional) or
+stochastic (bits input). Block shapes are MXU-aligned (multiples of 128);
+the K-loop is the innermost grid dimension so the accumulator tile stays
+resident in VMEM across it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["qmatmul", "qmatmul_kernel"]
+
+
+def qmatmul_kernel(x_ref, y_ref, bits_ref, out_ref, acc_ref, *,
+                   n_k: int, stochastic: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _emit():
+        acc = acc_ref[...]
+        if stochastic:
+            raw = jax.lax.bitcast_convert_type(acc, jnp.uint32)
+            rounded = (raw + (bits_ref[...] & jnp.uint32(0xFFFF))) \
+                & jnp.uint32(0xFFFF0000)
+            val = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+            out_ref[...] = jnp.where(jnp.isfinite(acc), val, acc).astype(jnp.bfloat16)
+        else:
+            out_ref[...] = acc.astype(jnp.bfloat16)
+
+
+def qmatmul(x: jax.Array, y: jax.Array, *, bits: jax.Array | None = None,
+            bm: int = 256, bn: int = 256, bk: int = 512,
+            interpret: bool | None = None) -> jax.Array:
+    """(M,K) bf16 @ (K,N) bf16 → (M,N) bf16 with f32 K-tile accumulation.
+
+    Dimensions must be multiples of the block shape (hardware-aligned
+    callers; the jnp fallback in ops.py handles ragged cases).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"{(M, K, N)} not divisible by blocks {(bm, bk, bn)}"
+    stochastic = bits is not None
+    if bits is None:
+        bits = jnp.zeros((M, N), jnp.uint32)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        partial(qmatmul_kernel, n_k=K // bk, stochastic=stochastic),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.bfloat16), y.astype(jnp.bfloat16), bits)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every kernel (bit-exact references for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sr_cast_ref", "fused_adamw_ref", "fused_sgd_ref", "qmatmul_ref"]
+
+
+def _sr_bits(val_f32, bits):
+    raw = jax.lax.bitcast_convert_type(val_f32.astype(jnp.float32), jnp.uint32)
+    rounded = (raw + (bits.astype(jnp.uint32) & jnp.uint32(0xFFFF))) \
+        & jnp.uint32(0xFFFF0000)
+    y = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    return jnp.where(jnp.isfinite(val_f32), y, val_f32).astype(jnp.bfloat16)
+
+
+def sr_cast_ref(x, bits):
+    return _sr_bits(x, bits)
+
+
+def qmatmul_ref(x, y, *, bits=None):
+    acc = jnp.dot(x.astype(jnp.bfloat16), y.astype(jnp.bfloat16),
+                  preferred_element_type=jnp.float32)
+    if bits is None:
+        return acc.astype(jnp.bfloat16)
+    return _sr_bits(acc, bits)
+
+
+def fused_adamw_ref(w, m, v, g, *, c=None, bits=None, lr, b1, b2, eps, wd,
+                    c1, c2, stochastic=True):
+    import numpy as np
+    f32 = lambda a: a.astype(jnp.float32)
+    bf = lambda a: a.astype(jnp.bfloat16)
+    kahan = c is not None
+    # match the kernel exactly: β arrive as f32 scalars and (1−β) is
+    # computed in f32 (not python f64)
+    b1 = np.float32(b1)
+    b2 = np.float32(b2)
+    wf, gf = f32(w), f32(g)
+    m2 = bf(b1 * f32(m) + (np.float32(1.0) - b1) * gf)
+    v2 = bf(b2 * f32(v) + (np.float32(1.0) - b2) * gf * gf)
+    m_hat = f32(bf(f32(m2) / (1.0 - c1)))
+    v_hat = f32(bf(jnp.sqrt(f32(v2) / (1.0 - c2))))
+    u = bf(lr * m_hat / (v_hat + eps) + lr * wd * wf)
+    if not kahan:
+        step = wf - f32(u)
+        w2 = _sr_bits(step, bits) if stochastic else bf(step)
+        return w2, m2, v2, None
+    cf = f32(c)
+    u_neg = bf(-f32(u))
+    y = bf(f32(u_neg) - cf)
+    s_val = wf + f32(y)
+    s = _sr_bits(s_val, bits) if stochastic else bf(s_val)
+    diff = bf(f32(s) - wf)
+    c2_ = bf(f32(diff) - f32(y))
+    return s, m2, v2, c2_
+
+
+def fused_sgd_ref(w, m, g, *, c=None, bits=None, lr, momentum=0.9, wd=0.0,
+                  stochastic=True):
+    f32 = lambda a: a.astype(jnp.float32)
+    bf = lambda a: a.astype(jnp.bfloat16)
+    kahan = c is not None
+    wf = f32(w)
+    gf = f32(bf(f32(g) + wd * wf))
+    m2 = bf(momentum * f32(m) + gf)
+    u = bf(lr * f32(m2))
+    if not kahan:
+        step = wf - f32(u)
+        w2 = _sr_bits(step, bits) if stochastic else bf(step)
+        return w2, m2, None
+    cf = f32(c)
+    u_neg = bf(-f32(u))
+    y = bf(f32(u_neg) - cf)
+    s_val = wf + f32(y)
+    s = _sr_bits(s_val, bits) if stochastic else bf(s_val)
+    diff = bf(f32(s) - wf)
+    return s, m2, bf(f32(diff) - f32(y))

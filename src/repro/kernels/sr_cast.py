@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: stochastic-rounding cast f32 → bf16.
+
+The hardware primitive the paper says future accelerators must provide
+(§5, App. B.1): add random bits to the low mantissa, truncate. One VMEM
+pass, VPU-only (no MXU), fully memory-bound — the roofline-optimal form.
+
+Tiling: 1-D grid over row blocks of a (rows, LANE) view; block shape
+(BLOCK_ROWS, 128) aligns the lane dimension to the VPU's 8×128 registers.
+Random bits are an explicit input (u32, same shape) so the kernel is
+deterministic given bits — the TPU-native variant would use
+``pltpu.prng_random_bits`` after ``pltpu.prng_seed``; on real hardware
+(v5e+) this maps onto native SR support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sr_cast_kernel", "sr_cast"]
+
+LANE = 128
+BLOCK_ROWS = 256
+
+
+def sr_cast_kernel(x_ref, bits_ref, out_ref):
+    x = x_ref[...]
+    bits = bits_ref[...]
+    raw = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    noise = bits & jnp.uint32(0xFFFF)
+    rounded = (raw + noise) & jnp.uint32(0xFFFF0000)
+    y = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    y = jnp.where(jnp.isfinite(x), y, x)
+    out_ref[...] = y.astype(jnp.bfloat16)
+
+
+def _pad_to(x, rows, cols):
+    n = x.size
+    total = rows * cols
+    flat = jnp.ravel(x)
+    if total != n:
+        flat = jnp.pad(flat, (0, total - n))
+    return flat.reshape(rows, cols)
+
+
+def sr_cast(x: jax.Array, bits: jax.Array, *, interpret: bool | None = None,
+            block_rows: int = BLOCK_ROWS) -> jax.Array:
+    """Stochastically round ``x`` (f32) to bf16 using ``bits`` (u32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = x.size
+    rows = max(1, -(-n // LANE))
+    grid_rows = -(-rows // block_rows) * block_rows
+    xp = _pad_to(x.astype(jnp.float32), grid_rows, LANE)
+    bp = _pad_to(bits.astype(jnp.uint32), grid_rows, LANE)
+    grid = (grid_rows // block_rows,)
+    out = pl.pallas_call(
+        sr_cast_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid_rows, LANE), jnp.bfloat16),
+        interpret=interpret,
+    )(xp, bp)
+    return out.reshape(-1)[:n].reshape(x.shape)

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per assignment):
+  compute_s    = HLO_FLOPs / (chips × 197e12)        [bf16 MXU peak, v5e]
+  memory_s     = HLO_bytes / (chips × 819e9)         [HBM BW]
+  collective_s = collective_bytes / (chips × 50e9)   [ICI per-link BW]
+
+``cost_analysis()`` on an SPMD-partitioned executable reports the
+*per-device* module, so FLOPs/bytes are per-chip already; we record both
+raw and normalized values and note the convention in EXPERIMENTS.md.
+Collective bytes are parsed from the post-partitioning HLO text (operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, async -start forms included, -done skipped).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*\)|\S+)\s+([\w\-]+)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuple types."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind operand bytes + counts from (partitioned) HLO."""
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2))
+    by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base not in COLLECTIVES:
+            continue
+        # operand bytes: sum sizes of referenced operands inside (...)
+        paren = line[line.find("(") + 1: line.rfind(")")]
+        operand_bytes = 0
+        for name in re.findall(r"%([\w.\-]+)", paren):
+            operand_bytes += sizes.get(name, 0)
+        if operand_bytes == 0:
+            # fallback: inline-typed operands or use output size
+            inline = _shape_bytes(paren)
+            operand_bytes = inline or _shape_bytes(m.group(2))
+        d = by_kind[base]
+        d["count"] += 1
+        d["bytes"] += operand_bytes
+    return dict(by_kind)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int,
+                   per_device: bool = True) -> dict:
+    """Three roofline terms in seconds. ``per_device=True`` when the inputs
+    come from the partitioned per-device module (cost_analysis)."""
+    scale = 1.0 if per_device else 1.0 / chips
+    compute_s = flops * scale / PEAK_FLOPS
+    memory_s = bytes_accessed * scale / HBM_BW
+    collective_s = collective_bytes * scale / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant}
+
+
+def model_flops(cfg, shape, *, per_step: bool = True) -> float:
+    """MODEL_FLOPS = 6·N_active·D (training) or 2·N_active·D (inference),
+    D = tokens processed by the step."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count, analytic."""
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    total = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        Di, N, Rk = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_eff
+        per = (D * 2 * Di + cfg.ssm_conv * Di + Di * (Rk + 2 * N)
+               + Rk * Di + Di * D + Di * N + Di)
+        return total + L * per
+    def attn(heads, kv):
+        hd = cfg.head_dim
+        return D * heads * hd + 2 * D * kv * hd + heads * hd * D
+    def mlp():
+        return 3 * D * cfg.d_ff
+    if cfg.block_pattern:
+        W = cfg.lru_width or D
+        rec = D * W * 2 + W * W * 2 + cfg.ssm_conv * W + W * D + W
+        n_attn = sum(1 for i in range(L) if cfg.block_pattern[i % len(cfg.block_pattern)] == "local_attn")
+        n_rec = L - n_attn
+        return total + n_attn * (attn(cfg.n_heads, cfg.n_kv_heads) + mlp()) \
+            + n_rec * (rec + mlp())
+    per = attn(cfg.n_heads, cfg.n_kv_heads)
+    if cfg.n_experts:
+        per += cfg.top_k * mlp()            # active experts only
+        per += D * cfg.n_experts            # router
+        if cfg.shared_expert:
+            per += mlp()
+    else:
+        per += mlp()
+    layers = L + (cfg.n_enc_layers if cfg.encdec else 0)
+    if cfg.encdec:
+        per += attn(cfg.n_heads, cfg.n_kv_heads)  # cross attention
+    return total + layers * per

@@ -1,0 +1,294 @@
+"""Loop-aware HLO cost analysis (fixes XLA's while-body undercount).
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**; our models
+scan over layers (and attention scans over KV chunks), so FLOPs/bytes/
+collective counts must be multiplied by loop trip counts. This walker
+parses the post-partitioning per-device HLO text and computes:
+
+* flops        — 2·M·N·K per ``dot`` (contracting dims parsed from the op),
+                 conv approximated as 2·|out|·|kernel|/C_out·C_in-grouped
+* bytes        — per-op HBM traffic model à la XLA cost analysis but
+                 slice-aware: dynamic-slice / dynamic-update-slice count
+                 the *slice* (the in-place big operand is free), fusion
+                 operand contributions are capped (slices hide inside)
+* collectives  — operand bytes + counts per kind, × enclosing trip counts
+
+Trip counts come from the max s32 constant in each while condition (the
+pattern ``lax.scan`` lowers to); dynamic conditions fall back to 1 and are
+reported in ``unknown_trip_whiles``.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->\s*.*\{")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_PLUMBING = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "copy-start",
+             "copy-done"}
+
+
+def _type_info(type_str: str):
+    """(total_bytes, list of (dtype, dims)) for an HLO type string."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d] if dims_s else []
+        n = math.prod(dims) if dims else 1
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    out_bytes: int
+    out_dims: list
+    line: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+    n_whiles: int = 0
+    bytes_by_kind: dict = field(default_factory=dict)
+    flops_by_meta: dict = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(d["bytes"] for d in self.collectives.values())
+
+
+def _parse(text: str) -> tuple[dict, dict, dict]:
+    """→ (computations by name, op defs by name (bytes,dims), raw op lines)."""
+    comps: dict[str, _Comp] = {}
+    sizes: dict[str, tuple[int, list]] = {}
+    current = None
+    for line in text.splitlines():
+        mh = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if mh and "=" not in line.split("(")[0]:
+            current = _Comp(mh.group(2))
+            comps[mh.group(2)] = current
+            continue
+        mo = _OP_RE.match(line)
+        if mo and current is not None:
+            name, type_str, kind = mo.groups()
+            b, shapes = _type_info(type_str)
+            dims = shapes[0][1] if shapes else []
+            sizes[name] = (b, dims)
+            current.ops.append(_Op(name, kind, b, dims, line))
+    return comps, sizes, {}
+
+
+def _operands(line: str) -> list[str]:
+    paren = line[line.find("(") + 1:]
+    depth = 1
+    out = []
+    buf = []
+    for ch in paren:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    inner = "".join(buf)
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def _dot_flops(op: _Op, sizes) -> float:
+    out_n = math.prod(op.out_dims) if op.out_dims else 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    ops = _operands(op.line)
+    if not m or not ops:
+        return 0.0
+    lhs = sizes.get(ops[0], (0, []))[1]
+    k = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(lhs):
+            k *= lhs[int(d)]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(op: _Op, sizes) -> float:
+    ops = _operands(op.line)
+    if len(ops) < 2:
+        return 0.0
+    kern = sizes.get(ops[1], (0, []))[1]
+    out_n = math.prod(op.out_dims) if op.out_dims else 1
+    if not kern:
+        return 0.0
+    # kernel = spatial… × C_in × C_out (HWIO-ish); flops ≈ 2·|out|·|kernel|/C_out
+    c_out = kern[-1]
+    return 2.0 * out_n * math.prod(kern) / max(c_out, 1)
+
+
+def _op_bytes(op: _Op, sizes, line: str) -> float:
+    kind = op.kind
+    if kind in _PLUMBING:
+        return 0.0
+    ops = _operands(line)
+    if kind == "dynamic-slice":
+        return 2.0 * op.out_bytes
+    if kind == "dynamic-update-slice":
+        upd = sizes.get(ops[1], (0, []))[0] if len(ops) > 1 else 0
+        return 2.0 * upd
+    if kind in ("gather", "scatter"):
+        return 2.0 * op.out_bytes
+    if kind == "fusion" and "dynamic-update-slice" in op.name:
+        # fused in-place slice write: traffic = read update + write region,
+        # NOT the whole aliased buffer (which the fusion's output type is)
+        opsz = sorted((sizes.get(o, (0, []))[0] for o in ops), reverse=True)
+        small = sum(opsz[1:]) if len(opsz) > 1 else op.out_bytes
+        return 2.0 * small
+    total = float(op.out_bytes)
+    for o in ops:
+        ob = sizes.get(o, (0, []))[0]
+        if kind == "fusion":
+            ob = min(ob, 16 * max(op.out_bytes, 1))  # slices hide inside
+        total += ob
+    return total
+
+
+_CALLS_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _trip_count(cond_name: str, comps: dict) -> int | None:
+    """Trip count of a lax.scan-style while: the constant operand of the
+    compare in the condition (resolved through the local constants)."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return None
+    consts: dict[str, int] = {}
+    for op in comp.ops:
+        if op.kind == "constant":
+            m = _CONST_RE.search(op.line)
+            if m:
+                consts[op.name] = int(m.group(1))
+    best = None
+    for op in comp.ops:
+        # the bound is a constant operand of the compare (possibly wrapped
+        # in a kLoop fusion on CPU: `wrapped_compare`)
+        if op.kind not in ("compare", "fusion"):
+            continue
+        for o in _operands(op.line):
+            if o in consts:
+                v = consts[o]
+                if best is None or v > best:
+                    best = v
+        for c in _CONST_RE.findall(op.line):
+            v = int(c)
+            if best is None or v > best:
+                best = v
+    return best
+
+
+def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
+    comps, sizes, _ = _parse(text)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = m.group(1) if m else next(iter(comps))
+    cost = HloCost()
+    memo: dict[str, tuple[float, float, dict, dict]] = {}
+
+    def _acc_kinds(dst: dict, src: dict, mult: float = 1.0):
+        for k, v in src.items():
+            dst[k] = dst.get(k, 0.0) + mult * v
+
+    def walk(name: str, depth=0) -> tuple[float, float, dict, dict]:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return 0.0, 0.0, {}, {}
+        fl, by = 0.0, 0.0
+        kinds: dict[str, float] = {}
+        coll: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+        for op in comp.ops:
+            kind = op.kind
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if kind.endswith("-done"):
+                continue
+            if kind == "while":
+                mb = _CALLS_RE.search(op.line)
+                mc = _COND_RE.search(op.line)
+                trips = _trip_count(mc.group(1), comps) if mc else None
+                cost.n_whiles += 1
+                if trips is None:
+                    trips = 1
+                    cost.unknown_trip_whiles += 1
+                if mb:
+                    f2, b2, c2, k2 = walk(mb.group(1), depth + 1)
+                    fl += trips * f2
+                    by += trips * b2
+                    _acc_kinds(kinds, k2, trips)
+                    for k, d in c2.items():
+                        coll[k]["count"] += trips * d["count"]
+                        coll[k]["bytes"] += trips * d["bytes"]
+                continue
+            if kind in ("call", "conditional"):
+                for cal in _CALLS_RE.findall(op.line):
+                    f2, b2, c2, k2 = walk(cal, depth + 1)
+                    fl += f2
+                    by += b2
+                    _acc_kinds(kinds, k2)
+                    for k, d in c2.items():
+                        coll[k]["count"] += d["count"]
+                        coll[k]["bytes"] += d["bytes"]
+                continue
+            if base in COLLECTIVES:
+                ob = sum(sizes.get(o, (0, []))[0] for o in _operands(op.line))
+                coll[base]["count"] += 1
+                coll[base]["bytes"] += ob or op.out_bytes
+                by += float(ob or op.out_bytes)
+                kinds[base] = kinds.get(base, 0.0) + float(ob or op.out_bytes)
+                continue
+            if kind == "dot":
+                fl += _dot_flops(op, sizes)
+            elif kind == "convolution":
+                fl += _conv_flops(op, sizes)
+            ob = _op_bytes(op, sizes, op.line)
+            by += ob
+            kinds[kind] = kinds.get(kind, 0.0) + ob
+        memo[name] = (fl, by, dict(coll), kinds)
+        return memo[name]
+
+    fl, by, coll, kinds = walk(entry)
+    cost.flops = fl
+    cost.bytes = by
+    cost.collectives = coll
+    cost.bytes_by_kind = dict(sorted(kinds.items(), key=lambda kv: -kv[1]))
+    return cost

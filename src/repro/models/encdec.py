@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, S_src, D) to the encoder.
+Encoder = bidirectional self-attention stack (sinusoidal positions);
+decoder = causal self-attention + cross-attention (learned positions in the
+real model; sinusoidal here — positions are not a numeric-format concern).
+Decode caches both the self-attn KV (growing) and cross-attn KV (fixed).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qarith import QArith
+from repro.dist.axes import shard_batch
+from repro.models import layers as L
+from repro.models import moe as M
+
+__all__ = ["init_encdec", "encode", "decoder_forward", "init_decode_cache",
+           "encdec_decode_step", "sinusoidal"]
+
+
+def sinusoidal(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(pos, d: int) -> jnp.ndarray:
+    """Sinusoidal row for one (possibly traced) scalar position → (d,)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "attn": L.attention_init(ks[0], cfg, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": M.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "self_attn": L.attention_init(ks[0], cfg, dtype),
+            "ln_x": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "cross_attn": L.attention_init(ks[1], cfg, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": M.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init_encdec(cfg, key, dtype=jnp.float32):
+    k_e, k_d, k_emb = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+        jax.random.split(k_e, cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+        jax.random.split(k_d, cfg.n_layers))
+    return {"enc_layers": enc, "dec_layers": dec,
+            "embed": L.embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+            "enc_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "final_norm": L.norm_init(cfg.norm, cfg.d_model, dtype)}
+
+
+def encode(qa: QArith, params, cfg, src_embeds, *, remat=True, attn_chunk=1024):
+    """src_embeds: (B,S_src,D) precomputed frame embeddings (frontend stub)."""
+    B, S, _ = src_embeds.shape
+    x = shard_batch(qa.cast(src_embeds + sinusoidal(S, cfg.d_model)[None]))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        h = L.norm_apply(qa, cfg.norm, p["ln1"], x)
+        y, _ = L.attention_apply(qa, p["attn"], h, cfg, positions=positions,
+                                 causal=False, chunk=attn_chunk)
+        x = qa.add(x, y)
+        h = L.norm_apply(qa, cfg.norm, p["ln2"], x)
+        return shard_batch(qa.add(x, M.mlp_apply(qa, p["mlp"], h, cfg.act_fn))), None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm_apply(qa, cfg.norm, params["enc_norm"], x)
+
+
+def _dec_block(qa, cfg, p, x, enc_out, positions, *, self_cache=None,
+               cross_kv=None, cache_pos=None, attn_chunk=1024):
+    h = L.norm_apply(qa, cfg.norm, p["ln1"], x)
+    y, new_self = L.attention_apply(qa, p["self_attn"], h, cfg,
+                                    positions=positions, causal=True,
+                                    cache=self_cache, cache_pos=cache_pos,
+                                    chunk=attn_chunk)
+    x = qa.add(x, y)
+    h = L.norm_apply(qa, cfg.norm, p["ln_x"], x)
+    if cross_kv is not None:
+        k, v = cross_kv
+        hd = cfg.head_dim
+        B = h.shape[0]
+        q = L.dense(qa, p["cross_attn"]["wq"], h).reshape(B, -1, cfg.n_heads, hd)
+        pos_k = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+        y = L.decode_attention(qa, q, k, v, pos_k,
+                               q_pos=jnp.full((B,), k.shape[1], jnp.int32))
+        y = L.dense(qa, p["cross_attn"]["wo"],
+                    y.reshape(B, -1, cfg.n_heads * hd))
+    else:
+        hd = cfg.head_dim
+        B, S_src = enc_out.shape[0], enc_out.shape[1]
+        k = L.dense(qa, p["cross_attn"]["wk"], enc_out).reshape(B, S_src, cfg.n_kv_heads, hd)
+        v = L.dense(qa, p["cross_attn"]["wv"], enc_out).reshape(B, S_src, cfg.n_kv_heads, hd)
+        q = L.dense(qa, p["cross_attn"]["wq"], h).reshape(B, h.shape[1], cfg.n_heads, hd)
+        att = L.flash_attention(qa, q, k, v, causal=False, chunk=attn_chunk)
+        y = L.dense(qa, p["cross_attn"]["wo"],
+                    att.reshape(B, h.shape[1], cfg.n_heads * hd))
+    x = qa.add(x, y)
+    h = L.norm_apply(qa, cfg.norm, p["ln2"], x)
+    return shard_batch(qa.add(x, M.mlp_apply(qa, p["mlp"], h, cfg.act_fn))), new_self
+
+
+def decoder_forward(qa: QArith, params, cfg, tokens, enc_out, *, remat=True,
+                    attn_chunk=1024):
+    """Teacher-forced decoder pass → f32 logits (B,S,V)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = qa.cast(jnp.take(params["embed"]["embedding"], tokens, axis=0)
+                + sinusoidal(S, cfg.d_model)[None].astype(jnp.float32))
+
+    def body(x, p):
+        return _dec_block(qa, cfg, p, x, enc_out, positions,
+                          attn_chunk=attn_chunk)
+
+    body_fn = jax.checkpoint(lambda c, p: body(c, p)) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    h = L.norm_apply(qa, cfg.norm, params["final_norm"], x)
+    return qa.matmul_f32out(h, params["embed"]["embedding"].T)
+
+
+def init_decode_cache(cfg, params, qa, enc_out, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Self-attn KV ring + precomputed per-layer cross KV."""
+    hd = cfg.head_dim
+    selfkv = (jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+              jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dtype),
+              jnp.full((cfg.n_layers, batch, max_len), -1, jnp.int32))
+
+    def cross_of_layer(p):
+        S_src = enc_out.shape[1]
+        k = L.dense(qa, p["cross_attn"]["wk"], enc_out).reshape(batch, S_src, cfg.n_kv_heads, hd)
+        v = L.dense(qa, p["cross_attn"]["wv"], enc_out).reshape(batch, S_src, cfg.n_kv_heads, hd)
+        return k.astype(dtype), v.astype(dtype)
+
+    cross = jax.vmap(cross_of_layer)(params["dec_layers"])
+    return {"self": selfkv, "cross": cross}
+
+
+def encdec_decode_step(qa: QArith, params, cfg, token, cache, cache_pos):
+    """One decoder token. token: (B,1). Returns (logits, new cache)."""
+    B = token.shape[0]
+    positions = jnp.broadcast_to(cache_pos[None, None], (B, 1)).astype(jnp.int32)
+    pos_emb = sinusoidal_at(jnp.asarray(cache_pos), cfg.d_model)   # (D,)
+    x = qa.cast(jnp.take(params["embed"]["embedding"], token, axis=0)
+                + pos_emb[None, None].astype(jnp.float32))
+
+    def body(x, inp):
+        p, selfkv, crosskv = inp
+        x, new_self = _dec_block(qa, cfg, p, x, None, positions,
+                                 self_cache=selfkv, cross_kv=crosskv,
+                                 cache_pos=cache_pos)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_layers"],
+                                         cache["self"], cache["cross"]))
+    h = L.norm_apply(qa, cfg.norm, params["final_norm"], x)
+    logits = qa.matmul_f32out(h, params["embed"]["embedding"].T)
+    return logits, {"self": new_self, "cross": cache["cross"]}

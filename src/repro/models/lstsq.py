@@ -1,0 +1,33 @@
+"""Least-squares regression — the paper's §3.1 theory-validation model.
+
+Matches the paper's synthetic setup: x ~ N(0, I_d), w* ~ U[0, 100)^d,
+y = x·w* + N(0, 0.5²); batch-size-1 SGD; quantization applied exactly where
+each theorem places it (weight updates vs forward/backward activations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat, round_nearest
+
+__all__ = ["make_dataset", "lstsq_grad_quantized"]
+
+
+def make_dataset(key, n: int = 1024, d: int = 10, noise: float = 0.5):
+    kx, kw, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d), jnp.float32)
+    w_star = jax.random.uniform(kw, (d,), minval=0.0, maxval=100.0)
+    y = X @ w_star + noise * jax.random.normal(kn, (n,))
+    return X, y, w_star
+
+
+def lstsq_grad_quantized(w, x, y, fmt: FloatFormat | None):
+    """Sample gradient with the paper's fwd/bwd rounding placement:
+    a = Q(x·w − y) (dot runs in the FMAC accumulator, one output rounding),
+    g = Q(Q(a)·x). ``fmt=None`` ⇒ exact."""
+    if fmt is None:
+        return (x @ w - y) * x
+    a = round_nearest(x @ w - y, fmt)       # activation rounding
+    ga = round_nearest(a, fmt)              # activation-grad rounding
+    return round_nearest(ga * x, fmt)       # weight-grad rounding

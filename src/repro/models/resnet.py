@@ -1,0 +1,90 @@
+"""Small CIFAR-style ResNet (the paper's vision workload, reduced).
+
+Convolutions follow the FMAC model: bf16 inputs, f32 accumulation
+(``preferred_element_type``), one output rounding. BatchNorm runs in
+training mode with f32 statistics (a fused op, paper footnote 4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qarith import QArith
+
+__all__ = ["resnet_init", "resnet_apply", "RESNET_CIFAR_SMALL"]
+
+RESNET_CIFAR_SMALL = dict(widths=(16, 32, 64), blocks_per_stage=1, classes=10)
+
+
+def _conv_init(key, k, c_in, c_out, dtype):
+    fan_in = k * k * c_in
+    w = jax.random.normal(key, (k, k, c_in, c_out), jnp.float32) * math.sqrt(2.0 / fan_in)
+    return w.astype(dtype)
+
+
+def _bn_init(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _conv(qa: QArith, w, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        qa.cast(x), qa.cast(w), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    return qa.cast(y)
+
+
+def _bn(qa: QArith, p, x):
+    def f(xf, s, b):
+        mu = xf.mean(axis=(0, 1, 2), keepdims=True)
+        var = xf.var(axis=(0, 1, 2), keepdims=True)
+        return (xf - mu) * jax.lax.rsqrt(var + 1e-5) * s + b
+    return qa.act(f, x, p["scale"], p["bias"])
+
+
+def resnet_init(key, cfg: dict, dtype=jnp.float32):
+    widths, nb = cfg["widths"], cfg["blocks_per_stage"]
+    ks = iter(jax.random.split(key, 2 + 3 * len(widths) * nb + len(widths)))
+    params = {"stem": _conv_init(next(ks), 3, 3, widths[0], dtype),
+              "stem_bn": _bn_init(widths[0], dtype), "stages": []}
+    c_in = widths[0]
+    for si, w in enumerate(widths):
+        stage = []
+        for bi in range(nb):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {"conv1": _conv_init(next(ks), 3, c_in, w, dtype),
+                   "bn1": _bn_init(w, dtype),
+                   "conv2": _conv_init(next(ks), 3, w, w, dtype),
+                   "bn2": _bn_init(w, dtype)}
+            if stride != 1 or c_in != w:
+                blk["proj"] = _conv_init(next(ks), 1, c_in, w, dtype)
+            blk["stride"] = stride
+            stage.append(blk)
+            c_in = w
+        params["stages"].append(stage)
+    head_key = next(ks)
+    params["head"] = {
+        "kernel": (jax.random.normal(head_key, (c_in, cfg["classes"]), jnp.float32)
+                   / math.sqrt(c_in)).astype(dtype),
+        "bias": jnp.zeros((cfg["classes"],), dtype)}
+    return params
+
+
+def resnet_apply(qa: QArith, params, x):
+    """x: (B,H,W,3) f32 images → logits (B, classes)."""
+    h = _bn(qa, params["stem_bn"], _conv(qa, params["stem"], qa.cast(x)))
+    h = qa.act(jax.nn.relu, h)
+    for stage in params["stages"]:
+        for blk in stage:
+            stride = blk["stride"]
+            y = _conv(qa, blk["conv1"], h, stride)
+            y = qa.act(jax.nn.relu, _bn(qa, blk["bn1"], y))
+            y = _bn(qa, blk["bn2"], _conv(qa, blk["conv2"], y))
+            sc = _conv(qa, blk["proj"], h, stride) if "proj" in blk else h
+            h = qa.act(jax.nn.relu, qa.add(y, sc))
+    pooled = qa.act(lambda v: v.mean(axis=(1, 2)), h)
+    logits = jnp.einsum("bc,ck->bk", pooled.astype(jnp.float32),
+                        params["head"]["kernel"].astype(jnp.float32))
+    return logits + params["head"]["bias"].astype(jnp.float32)

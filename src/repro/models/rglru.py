@@ -1,0 +1,74 @@
+"""RG-LRU recurrent block (RecurrentGemma, De et al. 2024).
+
+Griffin-style recurrent block: temporal conv + Real-Gated Linear Recurrent
+Unit. Shares the chunked :func:`linear_recurrence` engine with Mamba.
+
+    r_t = σ(W_r x_t)          recurrence gate
+    i_t = σ(W_i x_t)          input gate
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qarith import QArith
+from repro.models.layers import dense, dense_init
+from repro.models.ssm import causal_conv1d, conv_init, linear_recurrence
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode_step"]
+
+_C = 8.0  # RG-LRU temperature constant from the Griffin paper
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    W = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ [0.9, 0.999] at r=1 (Griffin §2.4)
+    u = jax.random.uniform(ks[4], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))            # softplus⁻¹(-ln a / c)
+    return {
+        "in_x": dense_init(ks[0], D, W, dtype=dtype),
+        "in_gate": dense_init(ks[1], D, W, dtype=dtype),
+        "conv": conv_init(ks[2], cfg.ssm_conv, W, dtype),
+        "w_r": dense_init(ks[3], W, W, dtype=dtype),
+        "w_i": dense_init(ks[5], W, W, dtype=dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out": dense_init(jax.random.fold_in(key, 7), W, D, dtype=dtype),
+    }
+
+
+def _gates(qa, p, xs):
+    r = jax.nn.sigmoid(dense(qa, p["w_r"], xs).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(qa, p["w_i"], xs).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    # multiplier keeps the state variance O(1): √(1 − a²)
+    b_scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, b_scale * i * xs.astype(jnp.float32)
+
+
+def rglru_apply(qa: QArith, p, x, cfg, *, chunk: int = 256):
+    """Full-sequence Griffin recurrent block. x: (B,S,D) → (B,S,D)."""
+    gate = qa.act(jax.nn.gelu, dense(qa, p["in_gate"], x))
+    xs = dense(qa, p["in_x"], x)
+    xs, _ = causal_conv1d(qa, p["conv"], xs)
+    a, b = _gates(qa, p, xs)
+    hs, _ = linear_recurrence(a, b, chunk=chunk)           # (B,S,W) f32
+    y = qa.cast(hs * gate.astype(jnp.float32))
+    return dense(qa, p["out"], y)
+
+
+def rglru_decode_step(qa: QArith, p, x, cfg, state):
+    """One-token step. state: {"conv": (B,W-1,Wd), "h": (B,Wd)} f32."""
+    gate = qa.act(jax.nn.gelu, dense(qa, p["in_gate"], x))
+    xs = dense(qa, p["in_x"], x)
+    xs, conv_state = causal_conv1d(qa, p["conv"], xs, state["conv"])
+    a, b = _gates(qa, p, xs)                               # (B,1,W)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = qa.cast(h[:, None, :] * gate.astype(jnp.float32))
+    return dense(qa, p["out"], y), {"conv": conv_state, "h": h}

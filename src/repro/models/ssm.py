@@ -1,0 +1,172 @@
+"""Mamba-1 selective SSM and the shared chunked linear-recurrence engine.
+
+TPU adaptation: instead of the CUDA selective-scan kernel, the recurrence
+``h_t = a_t ⊙ h_{t-1} + b_t`` runs as a *chunked* scan — within a chunk an
+``associative_scan`` (parallel, VPU-friendly), across chunks a ``lax.scan``
+carrying only the boundary state. Chunk size bounds the materialized
+(B, chunk, ...) working set, the same blocking argument as VMEM tiling.
+
+Per the paper's FMAC model the recurrence accumulates in f32 (the scan *is*
+the accumulator) and outputs are rounded once per step output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qarith import QArith
+from repro.models.layers import dense, dense_init
+
+__all__ = ["linear_recurrence", "mamba_init", "mamba_apply",
+           "mamba_decode_step", "causal_conv1d", "conv_init"]
+
+
+def linear_recurrence(a, b, h0=None, *, chunk: int = 256, project=None):
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: (B, S, ...).
+
+    Returns (y_all (B,S,…), h_last (B,…)) where y = h unless ``project``
+    is given — ``project(h_chunk, j)`` maps the per-chunk states
+    (B,chunk,…) to the per-chunk *outputs* INSIDE the chunk loop, so the
+    full (B,S,…) state tensor is never materialized (the Mamba C·h
+    contraction; §Perf falcon-mamba iteration — state traffic is the
+    dominant HBM term of SSM training otherwise).
+    """
+    B, S = a.shape[0], a.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2), constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    n = a.shape[1] // chunk
+    ac = jnp.moveaxis(a.reshape(B, n, chunk, *a.shape[2:]), 1, 0)
+    bc = jnp.moveaxis(b.reshape(B, n, chunk, *b.shape[2:]), 1, 0)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, ay * bx + by
+
+    def outer(h, inp):
+        a_i, b_i, j = inp                                 # (B, chunk, ...)
+        # fold carry into the first step of the chunk
+        b_i = b_i.at[:, 0].add(a_i[:, 0] * h)
+        aa, bb = jax.lax.associative_scan(combine, (a_i, b_i), axis=1)
+        out = bb if project is None else project(bb, j)
+        return bb[:, -1], out
+
+    h0 = jnp.zeros_like(a[:, 0]) if h0 is None else h0
+    h_last, ys = jax.lax.scan(outer, h0, (ac, bc, jnp.arange(n)))
+    ys = jnp.moveaxis(ys, 0, 1)
+    ys = ys.reshape(B, n * chunk, *ys.shape[3:])
+    return ys[:, :S], h_last
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (Mamba / RG-LRU temporal conv)
+# ---------------------------------------------------------------------------
+
+def conv_init(key, width: int, channels: int, dtype=jnp.float32):
+    k = jax.random.normal(key, (width, channels), jnp.float32) / math.sqrt(width)
+    return {"w": k.astype(dtype), "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(qa: QArith, p, x, state=None):
+    """Depthwise causal conv. x: (B,S,C); state: (B,W-1,C) history or None.
+
+    Returns (y, new_state) where new_state holds the trailing W−1 inputs.
+    """
+    W = p["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    xf = xx.astype(jnp.float32)
+    y = sum(xf[:, i:i + x.shape[1]] * p["w"][i].astype(jnp.float32)
+            for i in range(W))
+    y = y + p["b"].astype(jnp.float32)
+    new_state = xx[:, -(W - 1):] if W > 1 else state
+    return qa.cast(y), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_eff
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": dense_init(ks[0], D, 2 * Di, dtype=dtype),
+        "conv": conv_init(ks[1], cfg.ssm_conv, Di, dtype),
+        "x_proj": dense_init(ks[2], Di, R + 2 * N, dtype=dtype),
+        "dt_proj": dense_init(ks[3], R, Di, bias=True, dtype=dtype),
+        "out_proj": dense_init(ks[4], Di, D, dtype=dtype),
+        # S4D-real init: A = -(1..N) per channel, stored as log
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :],
+                                  (Di, 1))).astype(jnp.float32),
+        "D_skip": jnp.ones((Di,), jnp.float32),
+    }
+    # dt bias init → softplus⁻¹ of dt in [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[5], (Di,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    p["dt_proj"]["bias"] = (dt + jnp.log1p(-jnp.exp(-dt))).astype(dtype)
+    return p
+
+
+def _ssm_coeffs(qa, p, xs, cfg):
+    """Shared Δ/B/C computation. xs: (B,S,Di) post-conv activations."""
+    N, R = cfg.ssm_state, cfg.dt_rank_eff
+    dbc = dense(qa, p["x_proj"], xs)                       # (B,S,R+2N)
+    dt_r, Bc, Cc = jnp.split(dbc.astype(jnp.float32), [R, R + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_r,
+                                    p["dt_proj"]["kernel"].astype(jnp.float32))
+                         + p["dt_proj"]["bias"].astype(jnp.float32))  # (B,S,Di)
+    A = -jnp.exp(p["A_log"])                               # (Di,N)
+    da = jnp.exp(dt[..., None] * A)                        # (B,S,Di,N)  a_t
+    db = dt[..., None] * Bc[..., None, :] * xs.astype(jnp.float32)[..., None]  # b_t
+    return da, db, Cc
+
+
+def mamba_apply(qa: QArith, p, x, cfg, *, chunk: int = 256):
+    """Full-sequence Mamba block. x: (B,S,D) → (B,S,D).
+
+    The C·h contraction happens inside the recurrence chunk loop
+    (``project``), so the (B,S,Di,N) state tensor is never written to
+    HBM — only (B,S,Di) outputs are (§Perf falcon-mamba iteration)."""
+    xz = dense(qa, p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, _ = causal_conv1d(qa, p["conv"], xs)
+    xs = qa.silu(xs)
+    da, db, Cc = _ssm_coeffs(qa, p, xs, cfg)
+    S = x.shape[1]
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    Cpad = jnp.pad(Cc, [(0, 0), (0, n * chunk - S), (0, 0)])
+
+    def project(h_chunk, j):                               # (B,c,Di,N) → (B,c,Di)
+        Cj = jax.lax.dynamic_slice_in_dim(Cpad, j * chunk, chunk, axis=1)
+        return jnp.einsum("bcdn,bcn->bcd", h_chunk.astype(jnp.float32), Cj)
+
+    # 16-bit-FPU faithful: every elementwise recurrence op rounds its
+    # output to the compute format anyway — carrying the chunked scan in
+    # bf16 halves its HBM traffic (outputs projected in f32 above)
+    rec_dtype = qa.dtype if qa.policy.native else jnp.float32
+    y, _ = linear_recurrence(da.astype(rec_dtype), db.astype(rec_dtype),
+                             chunk=chunk, project=project)
+    y = y + p["D_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = qa.cast(y * jax.nn.silu(z.astype(jnp.float32)))    # gated, one round
+    return dense(qa, p["out_proj"], y)
+
+
+def mamba_decode_step(qa: QArith, p, x, cfg, state):
+    """One-token step. x: (B,1,D); state: {"conv": (B,W-1,Di), "h": (B,Di,N)}."""
+    xz = dense(qa, p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv1d(qa, p["conv"], xs, state["conv"])
+    xs = qa.silu(xs)
+    da, db, Cc = _ssm_coeffs(qa, p, xs, cfg)               # (B,1,Di,N)
+    h = da[:, 0] * state["h"] + db[:, 0]                   # (B,Di,N) f32
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None, :]
+    y = y + p["D_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = qa.cast(y * jax.nn.silu(z.astype(jnp.float32)))
+    return dense(qa, p["out_proj"], y), {"conv": conv_state, "h": h}

@@ -1,0 +1,21 @@
+"""Optimizers implementing the paper's Algorithms 2-5 plus baselines."""
+from repro.optim.adamw import AdamWState, adamw
+from repro.optim.base import (Optimizer, UpdateOps, init_params_for_policy,
+                              leafwise, tree_split_keys)
+from repro.optim.grad_compress import (compress_leaf, compressed_psum,
+                                       init_residual)
+from repro.optim.schedule import (constant, cosine_decay,
+                                  linear_warmup_cosine,
+                                  linear_warmup_linear_decay, step_decay)
+from repro.optim.sgd import SGDState, sgd
+
+__all__ = [
+    "adamw", "AdamWState", "sgd", "SGDState", "Optimizer", "UpdateOps",
+    "init_params_for_policy", "leafwise", "tree_split_keys",
+    "compress_leaf", "compressed_psum", "init_residual",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+    "linear_warmup_linear_decay", "step_decay",
+]
+from repro.optim.fused import fused_adamw_optimizer, fused_sgd_optimizer  # noqa: E402
+
+__all__ += ["fused_adamw_optimizer", "fused_sgd_optimizer"]

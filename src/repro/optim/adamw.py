@@ -1,0 +1,85 @@
+"""AdamW under every precision policy (paper Algorithms 4–5).
+
+All optimizer state — first/second moments *and* the bias-correction
+scalars c₁,c₂ — live in the policy's state format (bf16 for 16-bit-FPU
+training, matching the paper's Appendix B). Configs must pass a β₂ that is
+representable (the paper uses 0.997→grid; see
+:func:`repro.core.formats.nearest_representable`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.optim.base import Optimizer, leafwise, param_ops, state_ops
+
+__all__ = ["adamw"]
+
+
+class AdamWState(NamedTuple):
+    m: jax.Array            # pytree of first moments
+    v: jax.Array            # pytree of second moments
+    c1: jax.Array           # scalar ∏β₁ (bias correction), state format
+    c2: jax.Array           # scalar ∏β₂
+    kahan_c: jax.Array | None
+
+
+def adamw(policy: PrecisionPolicy, *, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    sops = state_ops(policy)
+    pops = param_ops(policy)
+    # snap hyperparameters onto the state grid (bf16: 0.999 → 1.0 is the
+    # trap the paper warns about; configs pass a representable value)
+    b1q = float(jax.device_get(sops.f32(sops.q(jnp.float32(b1)))))
+    b2q = float(jax.device_get(sops.f32(sops.q(jnp.float32(b2)))))
+
+    def init(params):
+        m = jax.tree_util.tree_map(sops.zeros_like, params)
+        v = jax.tree_util.tree_map(sops.zeros_like, params)
+        one = jnp.ones((), sops.dtype)
+        c = jax.tree_util.tree_map(pops.zeros_like, params) if policy.kahan else None
+        return AdamWState(m, v, one, one, c)
+
+    def _leaf(w, g, m, v, c, k, c1_new, c2_new, lr):
+        gf = sops.f32(g)
+        wf = pops.f32(w)
+        m_new = sops.q(b1q * sops.f32(m) + (1.0 - b1q) * gf)       # one FMAC
+        v_new = sops.q(b2q * sops.f32(v) + (1.0 - b2q) * gf * gf)  # one FMAC
+        m_hat = sops.f32(sops.q(sops.f32(m_new) / (1.0 - sops.f32(c1_new))))
+        v_hat = sops.f32(sops.q(jnp.sqrt(sops.f32(v_new) / (1.0 - sops.f32(c2_new)))))
+
+        if policy.update_rounding == "exact":
+            upd = lr * m_hat / (v_hat + eps) + lr * weight_decay * wf
+            return (wf - upd).astype(pops.dtype), m_new, v_new, c
+
+        u = sops.q(lr * m_hat / (v_hat + eps) + lr * weight_decay * wf)
+        if not policy.kahan:
+            step_val = wf - sops.f32(u)                            # the ⊖ op
+            if policy.update_rounding == "stochastic":
+                w_new = pops.q_sr(step_val, k)                     # Alg 4 l.11
+            else:
+                w_new = pops.q(step_val)
+            return w_new, m_new, v_new, c
+        # Kahan (Alg 5 lines 12–16)
+        u_neg = pops.q(-sops.f32(u))
+        y = pops.q(pops.f32(u_neg) - pops.f32(c))
+        s_val = pops.f32(w) + pops.f32(y)
+        s = pops.q_sr(s_val, k) if policy.update_rounding == "stochastic" else pops.q(s_val)
+        c_new = pops.q(pops.f32(pops.q(pops.f32(s) - pops.f32(w))) - pops.f32(y))
+        return s, m_new, v_new, c_new
+
+    def update(grads, state, params, *, step, key, lr):
+        del step
+        c1_new = sops.q(sops.f32(state.c1) * b1q)                  # Alg 4 l.7
+        c2_new = sops.q(sops.f32(state.c2) * b2q)
+        new_p, new_m, new_v, new_c = leafwise(
+            lambda w, g, m, v, c, k: _leaf(w, g, m, v, c, k, c1_new, c2_new, lr),
+            params, grads, state.m, state.v,
+            state.kahan_c if policy.kahan else None, key=key)
+        return new_p, AdamWState(new_m, new_v, c1_new, c2_new,
+                                 new_c if policy.kahan else None)
+
+    return Optimizer(f"adamw[{policy.name}]", policy, init, update)

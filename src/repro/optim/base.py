@@ -1,0 +1,112 @@
+"""Optimizer substrate: policy-aware quantized update arithmetic.
+
+Every line of the paper's Algorithms 2–5 is one FPU op: bf16 (or sub-16)
+inputs, f32 accumulator, output rounded once to the storage format. The
+:class:`UpdateOps` helper encodes that contract:
+
+* ``q(x)``       — nearest-round ``x`` onto the state/param grid (one FPU write)
+* ``q_sr(x, k)`` — stochastically round (the paper's ⊖ output mode)
+* ``f32(x)``     — read a stored tensor into the 32-bit accumulator
+
+For native formats the storage dtype is real bf16/fp16; simulated sub-16-bit
+formats are carried in f32 snapped onto their grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat, round_nearest, round_stochastic
+from repro.core.policy import PrecisionPolicy
+
+__all__ = ["UpdateOps", "Optimizer", "tree_split_keys", "leafwise",
+           "init_params_for_policy"]
+
+PyTree = Any
+
+
+class UpdateOps:
+    def __init__(self, fmt: FloatFormat, native_dtype):
+        self.fmt = fmt
+        self._dtype = native_dtype
+        self._native = fmt.name in ("bf16", "fp16", "fp32")
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    def f32(self, x: jax.Array) -> jax.Array:
+        return jnp.asarray(x, jnp.float32)
+
+    def q(self, x: jax.Array) -> jax.Array:
+        """One FPU op output: nearest-round onto the grid, stored."""
+        if self._native:
+            return jnp.asarray(x, self._dtype)
+        return round_nearest(self.f32(x), self.fmt)
+
+    def q_sr(self, x: jax.Array, key: jax.Array) -> jax.Array:
+        """One FPU op output with stochastic rounding."""
+        if self.fmt.name == "fp32":
+            return jnp.asarray(x, self._dtype)
+        y = round_stochastic(self.f32(x), key, self.fmt)
+        return jnp.asarray(y, self._dtype) if self._native else y
+
+    def zeros_like(self, x: jax.Array) -> jax.Array:
+        return jnp.zeros(x.shape, self._dtype)
+
+
+def state_ops(policy: PrecisionPolicy) -> UpdateOps:
+    return UpdateOps(policy.state_format, policy.state_dtype)
+
+
+def param_ops(policy: PrecisionPolicy) -> UpdateOps:
+    if policy.master_weights:
+        return UpdateOps(policy.param_format, jnp.float32)
+    return UpdateOps(policy.param_format, policy.param_dtype)
+
+
+def tree_split_keys(key: jax.Array, tree: PyTree) -> PyTree:
+    """One independent PRNG key per leaf (deterministic in leaf order)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def leafwise(fn, params: PyTree, *trees: PyTree, key: jax.Array) -> list[PyTree]:
+    """Apply ``fn(w, *leaves, key)`` per parameter leaf across aligned trees.
+
+    ``fn`` returns a tuple; the result is a list of pytrees (one per tuple
+    slot), each shaped like ``params``. Trees passed as ``None`` contribute
+    ``None`` leaves (used for absent optimizer buffers).
+    """
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    n = len(p_leaves)
+    cols = []
+    for t in trees:
+        cols.append([None] * n if t is None else treedef.flatten_up_to(t))
+    keys = jax.random.split(key, n)
+    outs = [fn(w, *[c[i] for c in cols], keys[i]) for i, w in enumerate(p_leaves)]
+    width = len(outs[0])
+    return [jax.tree_util.tree_unflatten(treedef, [o[j] for o in outs])
+            for j in range(width)]
+
+
+def init_params_for_policy(params_f32: PyTree, policy: PrecisionPolicy) -> PyTree:
+    """Cast freshly-initialized f32 params onto the policy's storage grid."""
+    ops = param_ops(policy)
+    return jax.tree_util.tree_map(ops.q, params_f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Functional optimizer: ``init`` builds state, ``update`` applies one
+    step of the policy's Algorithm (2–5 / exact / mixed)."""
+
+    name: str
+    policy: PrecisionPolicy
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+    # update(grads, state, params, *, step, key, lr) -> (new_params, new_state)

@@ -1,0 +1,111 @@
+"""Kernel-backed optimizers: the Pallas fused-update path.
+
+Same functional interface as :func:`repro.optim.sgd` / :func:`adamw`, but
+each leaf update is ONE fused kernel call (one HBM pass — Appendix B's
+efficiency argument). Only valid for native-bf16 policies (the kernels
+implement the bf16 grid); numerics match the reference optimizers up to
+the documented 1-ulp FMA ties (tests/test_optim_fused.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.fused_sgd import fused_sgd
+from repro.optim.adamw import AdamWState
+from repro.optim.base import Optimizer, state_ops
+from repro.optim.sgd import SGDState
+
+__all__ = ["fused_sgd_optimizer", "fused_adamw_optimizer"]
+
+
+def _check(policy: PrecisionPolicy):
+    if policy.param_format.name != "bf16" or policy.update_rounding == "exact":
+        raise ValueError(
+            f"fused kernels implement the bf16 16-bit-FPU recipe; "
+            f"policy {policy.name!r} is not supported")
+
+
+def fused_sgd_optimizer(policy: PrecisionPolicy, *, momentum: float = 0.9,
+                        weight_decay: float = 0.0) -> Optimizer:
+    _check(policy)
+    sops = state_ops(policy)
+    stochastic = policy.update_rounding == "stochastic"
+
+    def init(params):
+        m = jax.tree_util.tree_map(sops.zeros_like, params)
+        c = jax.tree_util.tree_map(sops.zeros_like, params) if policy.kahan else None
+        return SGDState(m, c)
+
+    def update(grads, state, params, *, step, key, lr):
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_l = treedef.flatten_up_to(grads)
+        m_l = treedef.flatten_up_to(state.momentum)
+        c_l = (treedef.flatten_up_to(state.kahan_c) if policy.kahan
+               else [None] * len(leaves))
+        keys = jax.random.split(key, len(leaves))
+        new_w, new_m, new_c = [], [], []
+        for w, g, m, c, k in zip(leaves, g_l, m_l, c_l, keys):
+            bits = (jax.random.bits(k, shape=w.shape, dtype=jnp.uint32)
+                    if stochastic else None)
+            w2, m2, c2 = fused_sgd(
+                w, m, g.astype(jnp.bfloat16), c=c, bits=bits,
+                stochastic=stochastic, lr=lr, momentum=momentum,
+                wd=weight_decay)
+            new_w.append(w2)
+            new_m.append(m2)
+            new_c.append(c2)
+        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        return unf(new_w), SGDState(unf(new_m),
+                                    unf(new_c) if policy.kahan else None)
+
+    return Optimizer(f"fused_sgd[{policy.name}]", policy, init, update)
+
+
+def fused_adamw_optimizer(policy: PrecisionPolicy, *, b1: float = 0.9,
+                          b2: float = 0.99609375, eps: float = 1e-8,
+                          weight_decay: float = 0.01) -> Optimizer:
+    _check(policy)
+    sops = state_ops(policy)
+    stochastic = policy.update_rounding == "stochastic"
+    b1q = float(jax.device_get(sops.f32(sops.q(jnp.float32(b1)))))
+    b2q = float(jax.device_get(sops.f32(sops.q(jnp.float32(b2)))))
+
+    def init(params):
+        m = jax.tree_util.tree_map(sops.zeros_like, params)
+        v = jax.tree_util.tree_map(sops.zeros_like, params)
+        one = jnp.ones((), sops.dtype)
+        c = jax.tree_util.tree_map(sops.zeros_like, params) if policy.kahan else None
+        return AdamWState(m, v, one, one, c)
+
+    def update(grads, state, params, *, step, key, lr):
+        c1 = sops.q(sops.f32(state.c1) * b1q)
+        c2 = sops.q(sops.f32(state.c2) * b2q)
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_l = treedef.flatten_up_to(grads)
+        m_l = treedef.flatten_up_to(state.m)
+        v_l = treedef.flatten_up_to(state.v)
+        ck = (treedef.flatten_up_to(state.kahan_c) if policy.kahan
+              else [None] * len(leaves))
+        keys = jax.random.split(key, len(leaves))
+        new_w, new_m, new_v, new_c = [], [], [], []
+        for w, g, m, v, c, k in zip(leaves, g_l, m_l, v_l, ck, keys):
+            bits = (jax.random.bits(k, shape=w.shape, dtype=jnp.uint32)
+                    if stochastic else None)
+            w2, m2, v2, c2_ = fused_adamw(
+                w, m, v, g.astype(jnp.bfloat16), c=c, bits=bits,
+                stochastic=stochastic, lr=lr, b1=b1q, b2=b2q, eps=eps,
+                wd=weight_decay, c1=sops.f32(c1), c2=sops.f32(c2))
+            new_w.append(w2)
+            new_m.append(m2)
+            new_v.append(v2)
+            new_c.append(c2_)
+        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        return unf(new_w), AdamWState(unf(new_m), unf(new_v), c1, c2,
+                                      unf(new_c) if policy.kahan else None)
+
+    return Optimizer(f"fused_adamw[{policy.name}]", policy, init, update)

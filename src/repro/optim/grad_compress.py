@@ -1,0 +1,65 @@
+"""SR-compressed gradient collectives with Kahan error feedback.
+
+Beyond-paper distributed-optimization trick that *reuses the paper's two
+primitives at the collective layer*: gradients are stochastically rounded to
+bf16 before the cross-replica all-reduce (halving DP gradient traffic vs
+fp32 reduce), and the per-shard quantization residual is carried to the next
+step by a Kahan-style error-feedback buffer (so the compression error is
+compensated rather than accumulated — the same mechanism as Algorithm 3,
+applied to communication instead of weight storage).
+
+On an FSDP/DP mesh this composes with pjit: the function is applied
+per-gradient-leaf *before* ``psum`` inside ``shard_map``-based data
+parallelism, or standalone for manual DP loops. SR keeps the reduce unbiased
+(E[q(g)] = g), which is the property the paper proves makes SGD tolerate the
+rounding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BF16, stochastic_round_bf16
+
+__all__ = ["compress_leaf", "compressed_psum", "init_residual"]
+
+PyTree = Any
+
+
+def init_residual(grads: PyTree) -> PyTree:
+    """Zero error-feedback buffers (f32, one per gradient leaf)."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_leaf(g: jax.Array, residual: jax.Array, key: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Quantize ``g + residual`` to bf16 with SR; return (q, new_residual)."""
+    corrected = g.astype(jnp.float32) + residual
+    q = stochastic_round_bf16(corrected, key)
+    new_residual = corrected - q.astype(jnp.float32)
+    return q, new_residual
+
+
+def compressed_psum(grads: PyTree, residuals: PyTree, key: jax.Array,
+                    axis_name: str) -> tuple[PyTree, PyTree]:
+    """bf16-SR all-reduce with error feedback. Call inside shard_map/pmap.
+
+    Returns (mean-reduced f32 gradients, updated residuals).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = treedef.flatten_up_to(residuals)
+    keys = jax.random.split(jax.random.fold_in(key, jax.lax.axis_index(axis_name)),
+                            len(leaves))
+    out, new_res = [], []
+    for g, r, k in zip(leaves, res_leaves, keys):
+        q, nr = compress_leaf(g, r, k)
+        # the wire format of this psum is bf16: 2 bytes/grad element
+        summed = jax.lax.psum(q.astype(jnp.bfloat16), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        out.append(summed.astype(jnp.float32) / n)
+        new_res.append(nr)
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(treedef, new_res))

@@ -1,0 +1,49 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup_linear_decay", "step_decay",
+           "cosine_decay", "linear_warmup_cosine"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(lr: float, boundaries: tuple[int, ...], factor: float = 0.1):
+    """Piecewise-constant decay (paper's ResNet schedules)."""
+    bs = jnp.asarray(boundaries)
+
+    def f(step):
+        n = jnp.sum(step >= bs)
+        return jnp.float32(lr) * jnp.float32(factor) ** n
+    return f
+
+
+def linear_warmup_linear_decay(peak: float, warmup: int, total: int):
+    """Paper's BERT schedule: linear warmup to ``peak`` then linear → 0."""
+    def f(step):
+        s = jnp.float32(step)
+        w = jnp.float32(max(warmup, 1))
+        up = peak * s / w
+        down = peak * jnp.maximum(0.0, (total - s) / max(total - warmup, 1))
+        return jnp.float32(jnp.where(s < warmup, up, down))
+    return f
+
+
+def cosine_decay(peak: float, total: int, floor: float = 0.0):
+    def f(step):
+        frac = jnp.clip(jnp.float32(step) / max(total, 1), 0.0, 1.0)
+        return jnp.float32(floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac)))
+    return f
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    cos = cosine_decay(peak, max(total - warmup, 1), floor)
+
+    def f(step):
+        s = jnp.float32(step)
+        up = peak * s / max(warmup, 1)
+        return jnp.float32(jnp.where(s < warmup, up, cos(s - warmup)))
+    return f

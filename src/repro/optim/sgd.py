@@ -1,0 +1,90 @@
+"""SGD with momentum under every precision policy (paper Algorithms 1–3).
+
+Variants, selected by the policy:
+
+* ``exact`` (fp32 / mixed / bf16_master): textbook fp32 update on the
+  (master) weights — the paper's 32-bit baseline and Table 3 ablation.
+* ``nearest`` (bf16_standard): every op's output nearest-rounded — the
+  paper's *failing* standard 16-bit-FPU algorithm.
+* ``stochastic`` (bf16_sr): Algorithm 2 — the update subtraction ⊖ uses
+  stochastic rounding; everything else stays nearest.
+* ``kahan=True`` (bf16_kahan / bf16_sr_kahan): Algorithm 3 — a compensation
+  buffer ``c`` (stored in the *param* format) accumulates the rounding
+  residual of each update; all ops remain nearest-rounded (or the
+  accumulate uses ⊖ when combined with SR, Fig 11).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.optim.base import Optimizer, leafwise, param_ops, state_ops
+
+__all__ = ["sgd"]
+
+
+class SGDState(NamedTuple):
+    momentum: jax.Array  # pytree, same structure as params
+    kahan_c: jax.Array | None  # pytree or None
+
+
+def sgd(policy: PrecisionPolicy, *, momentum: float = 0.9,
+        weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sops = state_ops(policy)
+    pops = param_ops(policy)
+    mu = float(momentum)
+    wd = float(weight_decay)
+
+    def init(params):
+        m = jax.tree_util.tree_map(sops.zeros_like, params)
+        c = jax.tree_util.tree_map(pops.zeros_like, params) if policy.kahan else None
+        return SGDState(m, c)
+
+    def _leaf_update(w, g, m, c, key, lr):
+        # g, m, w read into the f32 accumulator; each named op rounds once.
+        gf = sops.f32(g)
+        wf = pops.f32(w)
+        if wd:
+            gf = sops.f32(sops.q(gf + wd * wf))           # g ← g + d·w
+        m_new = sops.q(mu * sops.f32(m) + gf)             # m ← μ·m + g (one FMAC)
+        if nesterov:
+            gf = sops.f32(sops.q(gf + mu * sops.f32(m_new)))
+        else:
+            gf = sops.f32(m_new)
+
+        if policy.update_rounding == "exact":
+            # fp32 / master-copy path: exact update on fp32 weights
+            return (wf - lr * gf).astype(pops.dtype), m_new, c
+
+        u = sops.q(lr * gf)                               # u ← η·m (rounded)
+        if not policy.kahan:
+            step_val = wf - pops.f32(u)                   # the ⊖ subtraction
+            if policy.update_rounding == "stochastic":
+                w_new = pops.q_sr(step_val, key)          # Alg 2 line 5
+            else:
+                w_new = pops.q(step_val)                  # standard (nearest)
+            return w_new, m_new, c
+        # Kahan path (Alg 3): nearest rounding on every op; optionally the
+        # accumulate uses SR when combined (Fig 11).
+        u_neg = pops.q(-pops.f32(u))                      # u ← −η·m
+        y = pops.q(pops.f32(u_neg) - pops.f32(c))         # y ← u − c
+        s_val = pops.f32(w) + pops.f32(y)                 # s ← w + y
+        if policy.update_rounding == "stochastic":
+            s = pops.q_sr(s_val, key)
+        else:
+            s = pops.q(s_val)
+        c_new = pops.q(pops.f32(pops.q(pops.f32(s) - pops.f32(w))) - pops.f32(y))
+        return s, m_new, c_new
+
+    def update(grads, state, params, *, step, key, lr):
+        del step
+        new_params, new_m, new_c = leafwise(
+            lambda w, g, m, c, k: _leaf_update(w, g, m, c, k, lr),
+            params, grads, state.momentum,
+            state.kahan_c if policy.kahan else None, key=key)
+        return new_params, SGDState(new_m, new_c if policy.kahan else None)
+
+    return Optimizer(f"sgd[{policy.name}]", policy, init, update)

@@ -1,0 +1,50 @@
+"""Batched serving loop: prefill + greedy/temperature decode with KV cache."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.qarith import QArith
+from repro.models import registry as R
+
+__all__ = ["generate"]
+
+
+def generate(params, cfg, policy: PrecisionPolicy, prompts: jax.Array, *,
+             max_new_tokens: int = 32, temperature: float = 0.0,
+             seed: int = 0) -> jax.Array:
+    """prompts: (B, S_prompt) int32 → (B, S_prompt + max_new) int32.
+
+    Prefill fills the cache token-by-token through the jitted decode step
+    (teacher-forcing the prompt), then samples continuation tokens.
+    """
+    qa = QArith(policy)
+    B, S0 = prompts.shape
+    max_len = S0 + max_new_tokens
+    cache = R.make_cache(qa, params, cfg, {}, batch_size=B, max_len=max_len)
+
+    @jax.jit
+    def step(cache, token, pos):
+        logits, cache = R.decode(qa, params, cfg, token, cache, pos)
+        return logits, cache
+
+    key = jax.random.PRNGKey(seed)
+    out = [prompts]
+    logits = None
+    for t in range(S0):
+        logits, cache = step(cache, prompts[:, t:t + 1], jnp.int32(t))
+    tok = None
+    for t in range(max_new_tokens):
+        if temperature > 0:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, logits[:, -1] / temperature, axis=-1)
+            tok = tok[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        if t < max_new_tokens - 1:
+            logits, cache = step(cache, tok, jnp.int32(S0 + t))
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: atomic, keep-N, mesh-elastic.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json      # treedef, shapes, dtypes, step, wall time
+        arrays.npz         # flattened leaves, key = leaf index
+    <dir>/LATEST           # text file: "step_000123" (atomic rename commit)
+
+Design points for 1000+ node deployments (single-process container ⇒
+process-0 semantics; multi-host notes in README):
+
+* **Atomicity** — writes go to ``<dir>/tmp.<step>.<nonce>`` and are
+  committed by a single ``os.replace`` of the directory name followed by
+  an ``os.replace`` of the LATEST pointer; a crash mid-write leaves only
+  garbage tmp dirs which are GC'd on the next save.
+* **Elasticity** — arrays are stored *unsharded* (gathered), so a restore
+  may target a different mesh / device count / sharding; ``restore``
+  device_puts onto the provided shardings (or host) — this is the
+  re-shard-on-resume path used after shrinking/growing the cluster.
+* **keep_n** — bounded disk usage, oldest-first GC, never GC'ing the
+  LATEST target.
+* **Integrity** — manifest carries leaf count/shapes/dtypes; restore
+  validates before touching model state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+import uuid
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+PyTree = Any
+
+
+def _leaf_to_np(x) -> np.ndarray:
+    x = jax.device_get(x)
+    arr = np.asarray(x)
+    if arr.dtype == jax.numpy.bfloat16:
+        # store bf16 as raw uint16 with a dtype tag (npz has no bf16)
+        return arr.view(np.uint16)
+    return arr
+
+
+def save(directory: str | Path, step: int, tree: PyTree, *,
+         keep_n: int = 3, extra: dict | None = None) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    tmp = directory / f"tmp.{step}.{uuid.uuid4().hex[:8]}"
+    tmp.mkdir()
+    try:
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "dtypes": [str(jax.numpy.asarray(l).dtype) for l in leaves],
+            "shapes": [list(np.shape(l)) for l in leaves],
+            "extra": extra or {},
+        }
+        arrays = {}
+        for i, leaf in enumerate(leaves):
+            arrays[f"a{i}"] = _leaf_to_np(leaf)
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = directory / f"step_{step:09d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        # commit: atomically repoint LATEST
+        ptr = directory / f".latest.{uuid.uuid4().hex[:8]}"
+        ptr.write_text(final.name)
+        os.replace(ptr, directory / "LATEST")
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(directory, keep_n)
+    return final
+
+
+def _gc(directory: Path, keep_n: int) -> None:
+    keep = None
+    latest = directory / "LATEST"
+    if latest.exists():
+        keep = latest.read_text().strip()
+    steps = sorted(p for p in directory.glob("step_*") if p.is_dir())
+    excess = steps[:-keep_n] if keep_n > 0 else []
+    for p in excess:
+        if p.name != keep:
+            shutil.rmtree(p, ignore_errors=True)
+    for p in directory.glob("tmp.*"):
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> int | None:
+    latest = Path(directory) / "LATEST"
+    if not latest.exists():
+        return None
+    name = latest.read_text().strip()
+    target = Path(directory) / name
+    if not (target / "manifest.json").exists():
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
+            shardings: PyTree | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like``. ``shardings`` (a matching
+    tree of jax.sharding.Sharding or None) enables elastic re-sharding."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    src = directory / f"step_{step:09d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}")
+    data = np.load(src / "arrays.npz")
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+        arr = data[f"a{i}"]
+        want_dtype = jax.numpy.asarray(ref).dtype if hasattr(ref, "dtype") else None
+        if manifest["dtypes"][i] == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        if list(arr.shape) != manifest["shapes"][i]:
+            raise ValueError(f"leaf {i}: stored shape {arr.shape} != manifest")
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != model {np.shape(ref)}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Cadence + retention policy around save/restore."""
+
+    def __init__(self, directory: str | Path, *, every_steps: int = 100,
+                 keep_n: int = 3):
+        self.directory = Path(directory)
+        self.every_steps = every_steps
+        self.keep_n = keep_n
+
+    def maybe_save(self, step: int, tree: PyTree, *, force: bool = False):
+        if force or (self.every_steps and step % self.every_steps == 0 and step > 0):
+            return save(self.directory, step, tree, keep_n=self.keep_n)
+        return None
+
+    def restore_latest(self, like: PyTree, shardings=None):
+        return restore(self.directory, like, shardings=shardings)
+
+    def has_checkpoint(self) -> bool:
+        return latest_step(self.directory) is not None

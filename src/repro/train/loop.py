@@ -1,0 +1,123 @@
+"""Fault-tolerant training loop.
+
+Wraps the jitted train step with the machinery a 1000-node run needs:
+
+* resume-from-latest on startup (elastic: reshard onto the current mesh)
+* periodic atomic checkpoints (+ checkpoint-on-SIGTERM preemption hook)
+* bounded retry around the step (transient-failure tolerance; a
+  fault-injection hook exists for tests)
+* straggler telemetry: per-step wall-time EWMA; steps slower than
+  ``straggler_factor ×`` EWMA are counted and surfaced — the deployment
+  runbook (README) reacts by excluding the slow host and resuming from
+  the latest checkpoint on a shrunk mesh (the elastic restore path).
+* checkpoint cadence tightens automatically while stragglers persist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_state import TrainState
+
+__all__ = ["TrainLoopConfig", "run_training"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: str | None = None
+    ckpt_every: int = 100
+    keep_n: int = 3
+    max_retries_per_step: int = 2
+    straggler_factor: float = 3.0
+    log_every: int = 10
+    seed: int = 0
+
+
+def run_training(state: TrainState, train_step: Callable, batches: Iterator,
+                 cfg: TrainLoopConfig, *, log: Callable[[str], None] = print,
+                 fault_hook: Callable[[int], None] | None = None,
+                 state_shardings=None) -> tuple[TrainState, dict]:
+    """Run to ``total_steps`` with checkpoint/restart + retry.
+
+    ``batches`` must be an iterator addressable by step (we re-pull on
+    retry); ``fault_hook(step)`` (tests) may raise to simulate failures.
+    """
+    mgr = CheckpointManager(cfg.ckpt_dir, every_steps=cfg.ckpt_every,
+                            keep_n=cfg.keep_n) if cfg.ckpt_dir else None
+    if mgr and mgr.has_checkpoint():
+        state, at = mgr.restore_latest(state, shardings=state_shardings)
+        log(f"[loop] resumed from checkpoint at step {at}")
+
+    stop = {"preempted": False}
+
+    def _sigterm(sig, frame):
+        stop["preempted"] = True
+    old = None
+    try:
+        old = signal.signal(signal.SIGTERM, _sigterm)
+    except ValueError:
+        pass  # not on main thread (tests)
+
+    ewma = None
+    stragglers = 0
+    metrics_hist = []
+    step0 = int(jax.device_get(state.step))
+    for step in range(step0, cfg.total_steps):
+        batch = next(batches)
+        t0 = time.time()
+        attempt = 0
+        while True:
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)
+                state, metrics = train_step(state, batch, cfg.seed)
+                jax.block_until_ready(metrics["loss"])
+                break
+            except Exception as e:          # noqa: BLE001 — retry wall
+                attempt += 1
+                if attempt > cfg.max_retries_per_step:
+                    if mgr:
+                        mgr.maybe_save(step, state, force=True)
+                        log(f"[loop] step {step} failed {attempt}×; "
+                            f"checkpointed for external restart: {e}")
+                    raise
+                log(f"[loop] step {step} retry {attempt} after {type(e).__name__}")
+        dt = time.time() - t0
+        # the first steps carry jit-compile time — keep them out of the
+        # EWMA or a 20 s compile masks every real straggler for hundreds
+        # of steps
+        if step < step0 + 2:
+            dt_for_stats = None
+        else:
+            dt_for_stats = dt
+        straggling = (ewma is not None and dt_for_stats is not None
+                      and dt > cfg.straggler_factor * ewma)
+        if dt_for_stats is not None and not straggling:
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if straggling:
+            stragglers += 1
+            log(f"[loop] straggler: step {step} took {dt:.2f}s (ewma {ewma:.2f}s)")
+        if mgr:
+            every = max(cfg.ckpt_every // (2 if stragglers > 3 else 1), 1)
+            mgr.every_steps = every
+            mgr.maybe_save(step + 1, state)
+        if step % cfg.log_every == 0:
+            loss = float(jax.device_get(metrics["loss"]))
+            log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        metrics_hist.append({k: float(jax.device_get(v))
+                             for k, v in metrics.items()})
+        if stop["preempted"]:
+            if mgr:
+                mgr.maybe_save(step + 1, state, force=True)
+            log(f"[loop] preempted at step {step}; checkpointed and exiting")
+            break
+    if old is not None:
+        signal.signal(signal.SIGTERM, old)
+    return state, {"history": metrics_hist, "stragglers": stragglers,
+                   "preempted": stop["preempted"]}

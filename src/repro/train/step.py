@@ -1,0 +1,109 @@
+"""Train / eval / serve step builders.
+
+``make_train_step`` returns a pure jit-able function
+``(state, batch, seed) -> (state, metrics)`` closed over config, policy and
+optimizer. Precision flows per the paper: forward/backward run in the
+policy's compute format (master-copy policies cast a bf16 working copy of
+the weights for compute), gradients land in bf16 and feed the quantized
+optimizer update (Algorithms 2–5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import round_nearest
+from repro.core.policy import PrecisionPolicy
+from repro.core.qarith import QArith
+from repro.models import registry as R
+from repro.train.train_state import TrainState, softmax_xent
+
+__all__ = ["make_train_step", "make_eval_step", "make_serve_step",
+           "compute_params"]
+
+PyTree = Any
+
+
+def compute_params(params: PyTree, policy: PrecisionPolicy) -> PyTree:
+    """Working copy of the weights in the compute format.
+
+    * pure-16-bit policies: storage *is* the compute copy (no-op)
+    * master-copy policies (fp32 / mixed / ablation): one RNE cast per tensor
+    * simulated sub-16-bit: already grid-snapped f32, used as-is
+    """
+    if not policy.master_weights or policy.compute_format.name == "fp32":
+        return params
+    if policy.compute_format.name == "bf16":
+        return jax.tree_util.tree_map(lambda w: w.astype(jnp.bfloat16), params)
+    return jax.tree_util.tree_map(
+        lambda w: round_nearest(w, policy.compute_format), params)
+
+
+def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
+                    *, remat: bool = True, attn_chunk: int = 1024,
+                    loss_fn: Callable | None = None):
+    qa = QArith(policy)
+
+    def _loss(params, batch):
+        logits = R.forward_logits(qa, params, cfg, batch, remat=remat,
+                                  attn_chunk=attn_chunk)
+        if loss_fn is not None:
+            return loss_fn(logits, batch)
+        return softmax_xent(logits, batch["labels"])
+
+    def train_step(state: TrainState, batch, seed) -> tuple[TrainState, dict]:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), state.step)
+        wc = compute_params(state.params, policy)
+        loss, grads = jax.value_and_grad(_loss)(wc, batch)
+        # grads arrive in the compute dtype (bf16 FMAC outputs); the
+        # quantized optimizer consumes them per Algorithms 2–5.
+        lr = lr_schedule(state.step)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params,
+            step=state.step, key=key, lr=lr)
+        metrics = {"loss": loss.astype(jnp.float32), "lr": lr,
+                   "grad_norm": _global_norm(grads)}
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def _global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def make_eval_step(cfg, policy: PrecisionPolicy, *, attn_chunk: int = 1024):
+    qa = QArith(policy)
+
+    def eval_step(params, batch):
+        wc = compute_params(params, policy)
+        logits = R.forward_logits(qa, wc, cfg, batch, remat=False,
+                                  attn_chunk=attn_chunk)
+        loss = softmax_xent(logits, batch["labels"])
+        acc = (logits.argmax(-1) == batch["labels"]).mean()
+        return {"loss": loss, "acc": acc}
+
+    return eval_step
+
+
+def make_serve_step(cfg, policy: PrecisionPolicy):
+    """(params, cache, token, pos) → (next_token, logits, new_cache).
+
+    Greedy decode of exactly one token against the KV/state cache — the
+    function lowered for the ``decode_*`` / ``long_500k`` dry-run cells.
+    """
+    qa = QArith(policy)
+
+    def serve_step(params, cache, token, pos, mrope_positions=None):
+        wc = compute_params(params, policy)
+        logits, new_cache = R.decode(qa, wc, cfg, token, cache, pos,
+                                     mrope_positions=mrope_positions)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+
+    return serve_step

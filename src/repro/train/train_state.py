@@ -1,0 +1,32 @@
+"""Training state pytree + loss functions."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState", "softmax_xent", "make_train_state"]
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # i32 scalar
+    params: PyTree           # storage-format weights (master f32 if policy)
+    opt_state: PyTree
+
+
+def make_train_state(params: PyTree, optimizer) -> TrainState:
+    return TrainState(jnp.zeros((), jnp.int32), params, optimizer.init(params))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, *, ignore: int = -1
+                 ) -> jax.Array:
+    """Mean next-token cross entropy. logits (B,S,V) f32, labels (B,S) i32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels != ignore).astype(jnp.float32)
+    loss = (logz - gold) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Smoke tests and benches must see exactly 1 device (the dry-run sets 512
+# itself, in a subprocess). Make sure a stray XLA_FLAGS doesn't leak in.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

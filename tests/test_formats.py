@@ -1,0 +1,134 @@
+"""Unit + property tests for the rounding primitives (paper §2/§3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BF10, BF12, BF14, BF16, FP16, FORMATS,
+                        nearest_representable, round_nearest,
+                        round_stochastic, stochastic_round_bf16, ulp)
+from repro.core.formats import _round_nearest_e8
+
+finite_f32 = st.floats(min_value=np.float32(-3e38), max_value=np.float32(3e38),
+                       allow_nan=False, allow_infinity=False, width=32)
+
+
+class TestNearest:
+    def test_bf16_matches_native_cast(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (200_000,), jnp.float32) * \
+            jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (200_000,)) * 20)
+        ours = _round_nearest_e8(x, BF16)
+        native = x.astype(jnp.bfloat16).astype(jnp.float32)
+        assert bool(jnp.all(ours == native))
+
+    @pytest.mark.parametrize("fmt", [BF16, BF14, BF12, BF10])
+    def test_idempotent(self, fmt):
+        x = jax.random.normal(jax.random.PRNGKey(2), (10_000,)) * 100
+        q = round_nearest(x, fmt)
+        assert bool(jnp.all(round_nearest(q, fmt) == q))
+
+    @pytest.mark.parametrize("fmt", [BF16, BF14, BF12, BF10, FP16])
+    def test_error_within_ulp(self, fmt):
+        x = jax.random.normal(jax.random.PRNGKey(3), (10_000,))
+        q = round_nearest(x, fmt)
+        eps = fmt.machine_eps
+        ok = jnp.abs(q - x) <= 2 * eps * jnp.maximum(jnp.abs(x), 1e-30)
+        assert bool(ok.all())
+
+    def test_nan_inf_passthrough(self):
+        x = jnp.array([jnp.nan, jnp.inf, -jnp.inf, 0.0, -0.0], jnp.float32)
+        q = round_nearest(x, BF14)
+        assert bool(jnp.isnan(q[0]))
+        assert q[1] == jnp.inf and q[2] == -jnp.inf
+        assert q[3] == 0.0
+
+    @given(finite_f32)
+    @settings(max_examples=300, deadline=None)
+    def test_hyp_bf16_matches_numpy(self, v):
+        ours = float(round_nearest(jnp.float32(v), BF16))
+        ref = float(np.float32(v).astype(jax.numpy.bfloat16))
+        assert ours == ref or (np.isnan(ours) and np.isnan(ref))
+
+    @given(finite_f32, st.sampled_from(["bf14", "bf12", "bf10"]))
+    @settings(max_examples=300, deadline=None)
+    def test_hyp_monotonic_grid(self, v, fname):
+        fmt = FORMATS[fname]
+        q = float(round_nearest(jnp.float32(v), fmt))
+        # result is representable: re-rounding is a fixed point
+        assert float(round_nearest(jnp.float32(q), fmt)) == q or np.isnan(q)
+
+
+class TestStochastic:
+    @pytest.mark.parametrize("fmt", [BF16, BF14, BF12, FP16])
+    def test_output_is_neighbor(self, fmt):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (5_000,)) * 10
+        y = round_stochastic(x, jax.random.PRNGKey(7), fmt)
+        # every output snaps to the format grid
+        assert bool(jnp.all(round_nearest(y, fmt) == y))
+        # and is within one grid step of x
+        step = 2 * fmt.machine_eps * jnp.maximum(jnp.abs(x), 1e-30) * 2
+        assert bool(jnp.all(jnp.abs(y - x) <= step))
+
+    def test_unbiased_bf16(self):
+        v = jnp.float32(1.0 + 1.0 / 512.0)     # not representable in bf16
+        keys = jax.random.split(jax.random.PRNGKey(1), 40_000)
+        outs = jax.vmap(lambda k: round_stochastic(v, k, BF16))(keys)
+        # 5σ bound: ulp·√(p(1−p)/n) ≈ 8.4e-6 per draw-mean
+        assert abs(float(outs.mean()) - float(v)) < 4.5e-5
+
+    def test_unbiased_fp16_subnormal_range(self):
+        v = jnp.float32(3.1e-6)
+        keys = jax.random.split(jax.random.PRNGKey(2), 40_000)
+        outs = jax.vmap(lambda k: round_stochastic(v, k, FP16))(keys)
+        assert abs(float(outs.mean()) / float(v) - 1) < 1e-2
+
+    def test_exact_values_fixed(self):
+        x = jnp.float32(1.5)                    # representable everywhere
+        for fmt in (BF16, BF14, FP16):
+            y = round_stochastic(jnp.full((100,), x), jax.random.PRNGKey(3), fmt)
+            assert bool(jnp.all(y == x))
+
+    def test_native_bf16_path(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (1000,))
+        y = stochastic_round_bf16(x, jax.random.PRNGKey(5))
+        assert y.dtype == jnp.bfloat16
+
+    @given(st.floats(min_value=np.float32(-1e30), max_value=np.float32(1e30), allow_nan=False,
+                     allow_infinity=False, width=32), st.integers(0, 2**31 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_hyp_sr_between_neighbors(self, v, seed):
+        y = float(round_stochastic(jnp.float32(v), jax.random.PRNGKey(seed), BF16))
+        lo = float(jnp.float32(v).astype(jnp.bfloat16))
+        # y is on the bf16 grid and within 1 ulp of v
+        assert float(jnp.float32(y).astype(jnp.bfloat16)) == y
+        assert abs(y - v) <= 2 * abs(lo - v) + float(ulp(jnp.float32(v), BF16))
+
+
+class TestMisc:
+    def test_beta2_clamp(self):
+        assert nearest_representable(0.999, BF16, below_one=True) == 0.99609375
+        assert nearest_representable(0.997, BF16) == 0.99609375  # paper §C.1
+
+    def test_ulp_at_one(self):
+        assert float(ulp(jnp.float32(1.0), BF16)) == 2 ** -7
+
+
+class TestGradients:
+    """Quantizers must carry straight-through gradients (QPyTorch
+    convention) — without them sub-16-bit training is silently dead
+    (∇=0 through bitcasts; found via the Fig-10 benchmark)."""
+
+    def test_nearest_ste(self):
+        g = jax.grad(lambda x: jnp.sum(round_nearest(x, BF14) ** 2))(
+            jnp.array([1.2345, -0.5], jnp.float32))
+        q = round_nearest(jnp.array([1.2345, -0.5], jnp.float32), BF14)
+        assert bool(jnp.allclose(g, 2 * q))
+
+    def test_stochastic_ste(self):
+        x = jnp.array([0.777], jnp.float32)
+        g = jax.grad(lambda v: jnp.sum(
+            round_stochastic(v, jax.random.PRNGKey(0), BF12)))(x)
+        assert bool(jnp.allclose(g, 1.0))

@@ -1,0 +1,163 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) ≡ ref.py."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.fused_sgd import fused_sgd
+from repro.kernels.qmatmul import qmatmul
+from repro.kernels.sr_cast import sr_cast
+
+HP = dict(lr=1e-3, b1=0.9, b2=0.99609375, eps=1e-8, wd=0.01,
+          c1=0.9, c2=0.99609375)
+
+
+def _bits(key, shape):
+    return jax.random.bits(key, shape=shape, dtype=jnp.uint32)
+
+
+def assert_bf16_close(a, b, max_frac=0.005, scale=None, atol=None):
+    """Fused-kernel vs op-by-op reference: FMA contraction inside the
+    kernel may land one f32-ulp away from the two-rounding reference,
+    which flips a bf16 tie ~0.1% of the time. Allow ≤1 bf16 ulp on a tiny
+    fraction of elements; everything else must be bit-exact. ``scale``
+    widens the ulp reference (the Kahan c-buffer carries residuals of the
+    *weight*, so its 1-ulp flips scale with |w|, not |c|)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    neq = a != b
+    frac = float(neq.mean())
+    assert frac <= max_frac, f"{frac:.4%} of elements differ"
+    mag = jnp.maximum(jnp.abs(bf), 2.0 ** -126)
+    if scale is not None:
+        mag = jnp.maximum(mag, jnp.abs(scale.astype(jnp.float32)))
+    tol = 2.0 ** -7 * mag
+    if atol is not None:
+        tol = tol + atol
+    assert bool(jnp.all(jnp.abs(af - bf) <= tol + 1e-30)), "diff > 1 ulp"
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 32768, 100_001])
+def test_sr_cast_shapes(n):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n,), jnp.float32) * 7
+    bits = _bits(key, (n,))
+    assert bool(jnp.all(sr_cast(x, bits) == ref.sr_cast_ref(x, bits)))
+
+
+def test_sr_cast_extreme_values():
+    x = jnp.array([0.0, -0.0, 1e-38, -1e-38, 3e38, -3e38, jnp.inf, jnp.nan],
+                  jnp.float32)
+    bits = _bits(jax.random.PRNGKey(0), x.shape)
+    a, b = sr_cast(x, bits), ref.sr_cast_ref(x, bits)
+    both_nan = jnp.isnan(a) & jnp.isnan(b)
+    assert bool(jnp.all((a == b) | both_nan))
+
+
+def test_sr_cast_2d_input():
+    x = jax.random.normal(jax.random.PRNGKey(1), (33, 65), jnp.float32)
+    bits = _bits(jax.random.PRNGKey(2), x.shape)
+    out = sr_cast(x, bits)
+    assert out.shape == x.shape
+    assert bool(jnp.all(out == ref.sr_cast_ref(x, bits)))
+
+
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 128, 512),
+                                 (384, 256, 640)])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_qmatmul_sweep(mnk, stochastic):
+    M, N, K = mnk
+    kx, ky, kb = jax.random.split(jax.random.PRNGKey(M + N + K), 3)
+    x = jax.random.normal(kx, (M, K), jnp.bfloat16)
+    y = jax.random.normal(ky, (K, N), jnp.bfloat16)
+    bits = _bits(kb, (M, N)) if stochastic else None
+    got = qmatmul(x, y, bits=bits, bm=128, bn=128, bk=128)
+    want = ref.qmatmul_ref(x, y, bits=bits)
+    if K == 128:
+        # single K tile: identical contraction → bit-exact
+        assert bool(jnp.all(got == want))
+    else:
+        # K-tiled f32 partial sums reassociate the contraction; both are
+        # valid f32 accumulations — outputs may differ by 1 bf16 ulp
+        assert_bf16_close(got, want)
+
+
+def test_qmatmul_k_accumulation_in_f32():
+    """Many small K contributions must not be lost to bf16 accumulation —
+    the 32-bit-accumulator property of the paper's Table 1."""
+    K = 1024
+    x = jnp.full((128, K), 0.01, jnp.bfloat16)
+    y = jnp.full((K, 128), 0.01, jnp.bfloat16)
+    out = qmatmul(x, y, bm=128, bn=128, bk=128).astype(jnp.float32)
+    expect = K * float(jnp.bfloat16(0.01)) ** 2
+    assert abs(float(out[0, 0]) / expect - 1) < 0.01
+
+
+@pytest.mark.parametrize("n", [5, 512, 4096, 50_000])
+@pytest.mark.parametrize("stochastic,kahan", [(True, False), (False, False),
+                                              (True, True), (False, True)])
+def test_fused_adamw_sweep(n, stochastic, kahan):
+    key = jax.random.PRNGKey(n)
+    w = jax.random.normal(key, (n,), jnp.bfloat16)
+    m = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.bfloat16) * 0.1
+    v = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,), jnp.bfloat16)) * 0.01
+    g = jax.random.normal(jax.random.fold_in(key, 3), (n,), jnp.bfloat16)
+    c = jnp.zeros((n,), jnp.bfloat16) if kahan else None
+    bits = _bits(key, (n,))
+    got = fused_adamw(w, m, v, g, c=c, bits=bits, stochastic=stochastic, **HP)
+    want = ref.fused_adamw_ref(w, m, v, g, c=c, bits=bits,
+                               stochastic=stochastic, **HP)
+    for i, (a, b) in enumerate(zip(got, want)):
+        if a is None:
+            assert b is None
+        else:
+            # m-slot FMA under catastrophic cancellation: diff bounded by
+            # f32 rounding of the ADDENDS (not of the tiny result)
+            atol = (2.0 ** -22 * (jnp.abs(m.astype(jnp.float32))
+                                  + jnp.abs(g.astype(jnp.float32)))
+                    if i == 1 else None)
+            assert_bf16_close(a, b, scale=w if i == 3 else None, atol=atol)
+
+
+@pytest.mark.parametrize("n", [3, 1000, 8192])
+@pytest.mark.parametrize("stochastic,kahan", [(True, False), (True, True),
+                                              (False, True)])
+def test_fused_sgd_sweep(n, stochastic, kahan):
+    key = jax.random.PRNGKey(n + 1)
+    w = jax.random.normal(key, (n,), jnp.bfloat16)
+    m = jnp.zeros((n,), jnp.bfloat16)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.bfloat16)
+    c = jnp.zeros((n,), jnp.bfloat16) if kahan else None
+    bits = _bits(key, (n,))
+    got = fused_sgd(w, m, g, c=c, bits=bits, stochastic=stochastic,
+                    lr=0.1, momentum=0.9, wd=1e-4)
+    want = ref.fused_sgd_ref(w, m, g, c=c, bits=bits, stochastic=stochastic,
+                             lr=0.1, momentum=0.9, wd=1e-4)
+    for i, (a, b) in enumerate(zip(got, want)):
+        if a is None:
+            assert b is None
+        else:
+            atol = (2.0 ** -22 * (jnp.abs(m.astype(jnp.float32))
+                                  + jnp.abs(g.astype(jnp.float32)))
+                    if i == 1 else None)
+            assert_bf16_close(a, b, scale=w if i == 2 else None, atol=atol)
+
+
+def test_fused_kahan_accumulates_small_updates():
+    """End-to-end kernel-level replica of the paper's mechanism: tiny
+    updates cancelled by nearest rounding are recovered by the Kahan
+    variant of the fused kernel."""
+    n = 256
+    w = jnp.ones((n,), jnp.bfloat16)
+    m = jnp.zeros((n,), jnp.bfloat16)
+    c = jnp.zeros((n,), jnp.bfloat16)
+    g = jnp.full((n,), 1e-4, jnp.bfloat16)
+    w_n = w
+    for i in range(500):
+        w_n, m_n, _ = fused_sgd(w_n, jnp.zeros_like(m), g, c=None,
+                                bits=None, stochastic=False, lr=1.0, momentum=0.0)
+        w, m2, c = fused_sgd(w, jnp.zeros_like(m), g, c=c, bits=None,
+                             stochastic=False, lr=1.0, momentum=0.0)
+    assert float(w_n[0]) == 1.0                      # nearest: halted
+    assert abs(float(w[0]) - (1 - 0.05)) < 0.01      # kahan: moved

@@ -1,0 +1,145 @@
+"""Optimizer tests: Algorithms 2–5 semantics + the paper's Theorem-1
+halting phenomenon + Kahan small-update accumulation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import get_policy
+from repro.optim import adamw, init_params_for_policy, sgd
+
+
+def _run_lstsq(policy_name, steps=3000, lr=0.01, opt_kind="sgd", d=10, n=256):
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (n, d))
+    w_star = jax.random.uniform(jax.random.PRNGKey(1), (d,), minval=50., maxval=100.)
+    y = X @ w_star
+    pol = get_policy(policy_name)
+    opt = (sgd(pol, momentum=0.0) if opt_kind == "sgd"
+           else adamw(pol, b2=0.997, weight_decay=0.0))
+    params = init_params_for_policy({"w": jnp.zeros((d,), jnp.float32)}, pol)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, i, k):
+        idx = jax.random.randint(jax.random.fold_in(k, 0), (), 0, n)
+        g = jax.grad(lambda p: 0.5 * (X[idx] @ p["w"].astype(jnp.float32)
+                                      - y[idx]) ** 2)(params)
+        return opt.update(g, state, params, step=i, key=jax.random.fold_in(k, 1),
+                          lr=lr)
+
+    for i in range(steps):
+        params, state = step(params, state, i, jax.random.fold_in(key, i))
+    wf = params["w"].astype(jnp.float32)
+    return float(jnp.mean((X @ wf - y) ** 2))
+
+
+class TestTheorem1:
+    """The paper's core claim, empirically: nearest rounding on weight
+    updates halts convergence; SR and Kahan do not."""
+
+    def test_nearest_halts_sr_kahan_converge(self):
+        std = _run_lstsq("bf16_standard", steps=4000)
+        sr = _run_lstsq("bf16_sr", steps=4000)
+        kahan = _run_lstsq("bf16_kahan", steps=4000)
+        fp32 = _run_lstsq("fp32", steps=4000)
+        # nearest rounding halts an order of magnitude above the SR/Kahan
+        # floors (which are set by fwd/bwd rounding noise, Thm 2)
+        assert std > 2.5 * sr, (std, sr)
+        assert std > 2.5 * kahan, (std, kahan)
+        assert fp32 < 1e-6
+
+    def test_master_weight_ablation_matches_fp32(self):
+        """Table 3: 32-bit weights + exact updates closes the gap even
+        with bf16 fwd/bwd."""
+        abl = _run_lstsq("bf16_master")
+        std = _run_lstsq("bf16_standard")
+        assert abl < std / 10
+
+
+class TestKahan:
+    def test_accumulates_small_updates(self):
+        """1000 updates of size ~1e-4 onto w=1.0 (bf16 ulp 2^-7≈0.0078):
+        nearest cancels all of them; Kahan accumulates ≈ the exact sum."""
+        pol_k = get_policy("bf16_kahan")
+        pol_s = get_policy("bf16_standard")
+        for pol, expect_move in ((pol_k, True), (pol_s, False)):
+            opt = sgd(pol, momentum=0.0)
+            params = {"w": jnp.ones((4,), jnp.bfloat16)}
+            state = opt.init(params)
+            g = jnp.full((4,), 1e-4, jnp.bfloat16)
+            for i in range(1000):
+                params, state = opt.update({"w": g}, state, params,
+                                           step=i, key=jax.random.PRNGKey(i),
+                                           lr=1.0)
+            w = float(params["w"][0])
+            if expect_move:
+                assert abs(w - (1.0 - 0.1)) < 0.01, w
+            else:
+                assert w == 1.0, w
+
+    def test_sr_moves_in_expectation(self):
+        pol = get_policy("bf16_sr")
+        opt = sgd(pol, momentum=0.0)
+        params = {"w": jnp.ones((4096,), jnp.bfloat16)}
+        state = opt.init(params)
+        g = jnp.full((4096,), 1e-4, jnp.bfloat16)
+        for i in range(200):
+            params, state = opt.update({"w": g}, state, params, step=i,
+                                       key=jax.random.PRNGKey(i), lr=1.0)
+        mean_w = float(params["w"].astype(jnp.float32).mean())
+        assert abs(mean_w - (1.0 - 0.02)) < 0.004, mean_w
+
+
+class TestAdamW:
+    def test_high_precision_matches_reference(self):
+        """fp32-policy AdamW == a hand-rolled fp32 AdamW."""
+        pol = get_policy("fp32")
+        opt = adamw(pol, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01)
+        w = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": w}
+        state = opt.init(params)
+        g = jnp.array([0.1, 0.2, -0.3])
+        params, state = opt.update({"w": g}, state, params, step=0,
+                                   key=jax.random.PRNGKey(0), lr=1e-3)
+        m = 0.1 * g
+        v = 0.001 * g * g
+        m_hat = m / (1 - 0.9)
+        v_hat = jnp.sqrt(v / (1 - 0.999))
+        ref = w - (1e-3 * m_hat / (v_hat + 1e-8) + 1e-3 * 0.01 * w)
+        assert bool(jnp.allclose(params["w"], ref, rtol=1e-6))
+
+    def test_bf16_adamw_converges_lstsq(self):
+        loss = _run_lstsq("bf16_kahan", steps=2000, lr=0.05, opt_kind="adamw")
+        std = _run_lstsq("bf16_standard", steps=2000, lr=0.05, opt_kind="adamw")
+        assert loss < std
+
+    def test_states_are_bf16(self):
+        pol = get_policy("bf16_sr")
+        opt = adamw(pol, b2=0.997)
+        state = opt.init({"w": jnp.ones((8,), jnp.bfloat16)})
+        assert state.m["w"].dtype == jnp.bfloat16
+        assert state.v["w"].dtype == jnp.bfloat16
+        assert state.c1.dtype == jnp.bfloat16
+
+    def test_kahan_memory_shape(self):
+        pol = get_policy("bf16_kahan")
+        opt = adamw(pol, b2=0.997)
+        state = opt.init({"w": jnp.ones((8,), jnp.bfloat16)})
+        assert state.kahan_c["w"].shape == (8,)
+        assert state.kahan_c["w"].dtype == jnp.bfloat16
+
+
+class TestCombined:
+    def test_sr_plus_kahan(self):
+        """Fig 11: both techniques together still converge."""
+        loss = _run_lstsq("bf16_sr_kahan")
+        std = _run_lstsq("bf16_standard")
+        assert loss < std / 10
+
+
+class TestSub16:
+    @pytest.mark.parametrize("pname", ["bf14_kahan", "bf12_kahan"])
+    def test_sub16_trains(self, pname):
+        """Fig 10: lower precision degrades but Kahan keeps it learning."""
+        loss = _run_lstsq(pname, steps=2000)
+        assert loss < 1e4  # still converging (bf10 would blow up more)
