@@ -1,0 +1,7 @@
+"""repro — Revisiting BFloat16 Training, grown into a production JAX stack.
+
+Deliberately import-light: submodules that must control XLA environment
+variables before backend init (``repro.launch.dryrun``) rely on this
+package import having no jax side effects.
+"""
+__version__ = "0.1.0"

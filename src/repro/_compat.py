@@ -1,0 +1,31 @@
+"""Version-compatibility shims (no new dependencies — gate, don't install).
+
+``ensure_shard_map()`` backfills the modern top-level ``jax.shard_map``
+entry point (with its ``check_vma`` keyword) on jax versions that only
+ship ``jax.experimental.shard_map.shard_map`` (``check_rep``). No-op on
+jax versions that already expose it.
+"""
+from __future__ import annotations
+
+__all__ = ["ensure_shard_map"]
+
+
+def ensure_shard_map() -> None:
+    import jax
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs,
+                  check_vma=None, check_rep=None, **kwargs):
+        if check_rep is None:
+            check_rep = True if check_vma is None else check_vma
+
+        def bind(fn):
+            return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              **kwargs)
+
+        return bind if f is None else bind(f)
+
+    jax.shard_map = shard_map

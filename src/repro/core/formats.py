@@ -240,8 +240,17 @@ def ulp(x: jax.Array, fmt: FloatFormat) -> jax.Array:
     """Distance to the next-larger representable magnitude in ``fmt``."""
     x = jnp.abs(round_nearest(x, fmt))
     b = _bits(x)
-    up = _from_bits(b + jnp.uint32(2 ** fmt.shift))
-    return up - x
+    step = jnp.uint32(2 ** fmt.shift)
+    diff = _from_bits(b + step) - x
+    # Deep-subnormal grids: when the spacing is below 2^-126 the float
+    # subtraction above underflows to an f32 subnormal, which XLA CPU's
+    # FTZ/DAZ flushes to 0. The spacing there is step·2^(max(e,1)−1) in
+    # units of 2^-149 — below 2^23 units, where an f32's bit pattern *is*
+    # its unit count — so bit-casting the unit count gives it exactly.
+    exp = (b >> 23) & jnp.uint32(0xFF)
+    shift_c = jnp.minimum(jnp.maximum(exp, jnp.uint32(1)) - 1, jnp.uint32(23))
+    tiny = _from_bits(step << shift_c)
+    return jnp.where(fmt.shift + shift_c < 23, tiny, diff)
 
 
 def nearest_representable(value: float, fmt: FloatFormat = BF16, *, below_one: bool = False) -> float:

@@ -1,0 +1,29 @@
+"""Distribution subsystem: logical-axis helpers + PartitionSpec inference.
+
+Two modules, both mesh-shape-agnostic (they read axis *names*, not sizes):
+
+* :mod:`repro.dist.axes` — activation-level helpers used inside traced
+  model code (``shard_batch``, ``shard_heads``, ``padded_head_count``)
+  plus the :func:`activation_sharding` context manager that scopes them.
+  Outside the context every helper is an exact no-op, so single-device
+  training and the CPU smoke tests never see a sharding constraint.
+* :mod:`repro.dist.partition` — PartitionSpec inference over pytrees:
+  parameters (``param_specs``), optimizer state incl. Kahan/SR buffers
+  (``state_shardings``), input batches (``batch_specs``) and decode
+  caches (``cache_specs``), plus the ``dp_axes`` mesh helper.
+
+Convention (see ROADMAP): the ``model`` mesh axis carries tensor/expert
+parallelism; every other axis (``data``, ``pod``) is data parallelism.
+"""
+from repro.dist.axes import (ActivationSharding, activation_sharding,
+                             current_sharding, padded_head_count,
+                             shard_batch, shard_heads)
+from repro.dist.partition import (batch_specs, cache_specs, dp_axes, dp_size,
+                                  param_specs, state_shardings)
+
+__all__ = [
+    "ActivationSharding", "activation_sharding", "current_sharding",
+    "padded_head_count", "shard_batch", "shard_heads",
+    "batch_specs", "cache_specs", "dp_axes", "dp_size",
+    "param_specs", "state_shardings",
+]

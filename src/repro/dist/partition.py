@@ -1,0 +1,201 @@
+"""PartitionSpec inference over model / optimizer / batch / cache pytrees.
+
+Placement policy (this PR's scaling axis — pure DP × TP; FSDP is a later
+ROADMAP item):
+
+* ``model`` axis — Megatron-style tensor parallelism inferred from leaf
+  *names*: column-parallel projections shard their output features,
+  row-parallel projections their input features, embeddings their vocab
+  rows. Expert tensors shard the FFN feature dim (TP-in-expert). Anything
+  unrecognized, non-divisible, or numerically delicate (router, norms,
+  biases, SSM ``A_log``/gate vectors) stays replicated.
+* every other axis (``data``, ``pod``) — data parallelism: parameters are
+  replicated across it; batches and decode caches shard their batch dim.
+
+Stacked-layer leaves (``lax.scan`` over a leading layer/group dim — see
+``repro.models.transformer``) are recognized by their root key so rules
+index dimensions from the *end* of the shape.
+
+``state_shardings`` aligns optimizer state with the parameter specs
+structurally: any sub-pytree shaped exactly like the parameter tree
+(moments, Kahan compensation, SR-residual buffers) inherits the parameter
+specs leaf-for-leaf; scalars (bias-correction c₁/c₂) replicate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["MODEL_AXIS", "dp_axes", "dp_size", "param_specs",
+           "state_shardings", "batch_specs", "cache_specs"]
+
+PyTree = Any
+
+MODEL_AXIS = "model"
+
+# Column-parallel: shard the output-feature (last) dim of the kernel.
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv",                  # attention in-projections
+    "w_gate", "w_up",                  # dense MLP
+    "we_gate", "we_up",                # MoE expert FFN (TP-in-expert)
+    "in_proj", "in_x", "in_gate",      # mamba / rg-lru in-projections
+    "w_r", "w_i",                      # rg-lru gates (square; either works)
+    "dt_proj",                         # mamba dt head (R → d_inner)
+    "lm_head",
+})
+# Row-parallel: shard the input-feature (second-to-last) dim of the kernel.
+_ROW_PARALLEL = frozenset({
+    "wo", "w_down", "we_down", "out_proj", "out", "x_proj",
+})
+# Root keys whose leaves carry a leading stacked-layer dim.
+_STACKED_ROOTS = frozenset({"layers", "enc_layers", "dec_layers"})
+# Decode-cache roots with a leading stacked-layer dim.
+_STACKED_CACHE_ROOTS = _STACKED_ROOTS | {"self", "cross"}
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Every mesh axis that carries data parallelism (all but ``model``)."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _mp_size(mesh) -> int:
+    return mesh.shape[MODEL_AXIS] if MODEL_AXIS in mesh.axis_names else 1
+
+
+def _names(path) -> list[str]:
+    """String keys along a tree_map_with_path path (tuple indices skipped)."""
+    out = []
+    for k in path:
+        if hasattr(k, "key"):          # DictKey
+            out.append(str(k.key))
+        elif hasattr(k, "name"):       # GetAttrKey (NamedTuple field)
+            out.append(str(k.name))
+    return out
+
+
+def param_specs(params: PyTree, cfg, mesh) -> PyTree:
+    """PartitionSpec per parameter leaf (same tree structure as ``params``)."""
+    del cfg  # rules are name/shape-driven; cfg kept for future FSDP policies
+    mp = _mp_size(mesh)
+
+    def spec(path, leaf):
+        ndim = len(leaf.shape)
+        parts: list = [None] * ndim
+        names = _names(path)
+        if mp > 1 and names and ndim:
+            stacked = names[0] in _STACKED_ROOTS
+            erank = ndim - (1 if stacked else 0)
+            leafname = names[-1]
+            base = (names[-2] if len(names) >= 2
+                    and leafname in ("kernel", "bias", "w", "b") else leafname)
+            dim = None
+            if erank >= 2 and leafname != "bias":
+                if leafname == "embedding":
+                    dim = ndim - 2                 # vocab rows
+                elif base in _COL_PARALLEL:
+                    dim = ndim - 1
+                elif base in _ROW_PARALLEL:
+                    dim = ndim - 2
+            if dim is not None and leaf.shape[dim] % mp == 0:
+                parts[dim] = MODEL_AXIS
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def state_shardings(pspecs: PyTree, opt_shape: PyTree, mesh) -> PyTree:
+    """Specs for optimizer state, aligned with the parameter specs.
+
+    Any sub-pytree of ``opt_shape`` whose structure equals the parameter
+    tree (first/second moments, momentum, Kahan compensation, SR residual
+    buffers) gets ``pspecs`` verbatim; remaining leaves (bias-correction
+    scalars etc.) replicate.
+    """
+    del mesh
+    pdef = jax.tree_util.tree_structure(pspecs)
+
+    def walk(node):
+        if node is None:
+            return None
+        if jax.tree_util.tree_structure(node) == pdef:
+            return pspecs
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if hasattr(node, "_fields"):               # NamedTuple state
+            return type(node)(*(walk(getattr(node, f)) for f in node._fields))
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return P()
+
+    return walk(opt_shape)
+
+
+def batch_specs(batch: PyTree, mesh) -> PyTree:
+    """Shard every input's batch dim on the data axes (replicate the rest).
+
+    ``mrope_positions`` carries its batch in dim 1 ((3, B, S) layout); all
+    other inputs lead with it. Non-divisible batches replicate.
+    """
+    dp = dp_axes(mesh)
+    n = dp_size(mesh)
+
+    def spec(path, leaf):
+        ndim = len(leaf.shape)
+        parts: list = [None] * ndim
+        names = _names(path)
+        bdim = 1 if (names and names[-1] == "mrope_positions") else 0
+        if n > 1 and ndim > bdim and leaf.shape[bdim] % n == 0:
+            parts[bdim] = dp
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(cache: PyTree, cfg, mesh) -> PyTree:
+    """Specs for decode caches: batch dim on data, head/channel on model.
+
+    Handles the three cache families (see ``repro.models``): attention KV
+    ring buffers ``(…, B, S, H_kv, hd)`` + position maps ``(…, B, S)``,
+    Mamba ``{"conv": (…, B, W−1, d_inner), "h": (…, B, d_inner, N)}`` and
+    RG-LRU ``{"conv": (…, B, W−1, W), "h": (…, B, W)}``, each optionally
+    stacked under a leading scanned-layer dim.
+    """
+    del cfg
+    dp = dp_axes(mesh)
+    n = dp_size(mesh)
+    mp = _mp_size(mesh)
+
+    def spec(path, leaf):
+        ndim = len(leaf.shape)
+        parts: list = [None] * ndim
+        names = _names(path)
+        stacked = bool(names) and names[0] in _STACKED_CACHE_ROOTS
+        bdim = 1 if stacked else 0
+        if n > 1 and ndim > bdim and leaf.shape[bdim] % n == 0:
+            parts[bdim] = dp
+        if mp > 1 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            erank = ndim - (1 if stacked else 0)
+            leafname = names[-1] if names else ""
+            dim = None
+            if leafname == "conv" or (leafname == "h" and erank == 2):
+                dim = ndim - 1                     # channel-last state
+            elif leafname == "h" and erank == 3:
+                dim = ndim - 2                     # mamba (B, d_inner, N)
+            elif erank == 4:
+                dim = ndim - 2                     # KV cache head axis
+            if (dim is not None and dim != bdim
+                    and leaf.shape[dim] % mp == 0):
+                parts[dim] = MODEL_AXIS
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,109 @@
+"""Minimal deterministic stand-in for `hypothesis` property testing.
+
+The container policy is "gate missing deps, don't install them" — when the
+real ``hypothesis`` package is absent, ``conftest.py`` registers this
+module under the ``hypothesis`` name so ``tests/test_formats.py`` still
+collects and its property tests still run, against a fixed deterministic
+sample stream (edge values + log-uniform magnitudes) instead of a real
+shrinking search. When hypothesis IS installed, this file is never used.
+
+Supports exactly the API surface the test suite uses: ``given``,
+``settings(max_examples=…, deadline=…)``, and the ``floats`` /
+``integers`` / ``sampled_from`` strategies.
+"""
+from __future__ import annotations
+
+import math
+import sys
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "floats", "integers",
+           "sampled_from"]
+
+_F32_MAX = 3.4028235e38
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def floats(min_value=None, max_value=None, allow_nan=False,
+           allow_infinity=False, width=64):
+    lo = -_F32_MAX if min_value is None else float(min_value)
+    hi = _F32_MAX if max_value is None else float(max_value)
+    edges = [v for v in (lo, hi, 0.0, -0.0, 1.0, -1.0, 0.5, -0.5,
+                         1.0 + 1.0 / 512.0, 65504.0, 6e-8, -6e-8,
+                         1.1754944e-38, -1.1754944e-38, 3.0e-39, math.pi)
+             if lo <= v <= hi]
+
+    def draw(rng):
+        if edges and rng.random() < 0.2:
+            x = edges[int(rng.integers(len(edges)))]
+        else:
+            # log-uniform magnitude over the full dynamic range, both signs
+            hi_exp = math.log10(max(abs(lo), abs(hi), 1.0))
+            x = 10.0 ** rng.uniform(-44.0, hi_exp)
+            if rng.random() < 0.5:
+                x = -x
+            x = min(max(x, lo), hi)
+        if width == 32:
+            x = float(np.float32(x))
+        if not allow_nan and math.isnan(x):
+            x = 0.0
+        if not allow_infinity and math.isinf(x):
+            x = hi if x > 0 else lo
+        return x
+
+    return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(int(min_value), int(max_value) + 1)))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def settings(max_examples: int = 100, deadline=None, **_kwargs):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(*strats):
+    def decorate(fn):
+        # NOTE: no functools.wraps — pytest must see (*args, **kwargs), not
+        # the wrapped signature, or it would demand fixtures for the drawn
+        # parameters.
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 100))
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"property falsified on example {i}: {drawn!r}") from e
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        if hasattr(fn, "_stub_max_examples"):
+            runner._stub_max_examples = fn._stub_max_examples
+        return runner
+
+    return decorate
+
+
+# `from hypothesis import strategies as st` resolves to this same module.
+strategies = sys.modules[__name__]

@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.dist
+
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
 

@@ -68,8 +68,11 @@ class TestDLRM:
                     return jnp.mean(jnp.maximum(logits, 0) - logits * y
                                     + jnp.log1p(jnp.exp(-jnp.abs(logits))))
                 loss, g = jax.value_and_grad(loss_fn)(params)
+                # MLPerf-style plain-SGD lr: the small-MLP gradients are
+                # tiny, and at lr ≤ 0.1 the model never leaves the ln 2
+                # plateau within the step budget
                 p2, s2 = opt.update(g, state, params, step=i,
-                                    key=jax.random.PRNGKey(i), lr=0.1)
+                                    key=jax.random.PRNGKey(i), lr=1.0)
                 return p2, s2, loss
 
             losses = []
@@ -83,7 +86,8 @@ class TestDLRM:
         sr = run("bf16_sr")
         std = run("bf16_standard")
         assert min(sr[-20:]) <= min(std[-20:]) + 0.02
-        assert sr[-1] < sr[0]
+        # averaged over batches: single-batch losses carry ±0.01 label noise
+        assert sum(sr[-10:]) / 10 < sum(sr[:10]) / 10
 
 
 class TestServe:
