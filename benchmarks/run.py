@@ -20,6 +20,7 @@ SECTIONS = [
     ("fig12_fp16", "benchmarks.bench_fp16"),
     ("appB_kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("fsdp_memory", "benchmarks.bench_fsdp"),
 ]
 
 

@@ -1,6 +1,6 @@
 """Distribution subsystem: logical-axis helpers + PartitionSpec inference.
 
-Two modules, both mesh-shape-agnostic (they read axis *names*, not sizes):
+Three modules, all mesh-shape-agnostic (they read axis *names*, not sizes):
 
 * :mod:`repro.dist.axes` — activation-level helpers used inside traced
   model code (``shard_batch``, ``shard_heads``, ``padded_head_count``)
@@ -10,20 +10,34 @@ Two modules, both mesh-shape-agnostic (they read axis *names*, not sizes):
 * :mod:`repro.dist.partition` — PartitionSpec inference over pytrees:
   parameters (``param_specs``), optimizer state incl. Kahan/SR buffers
   (``state_shardings``), input batches (``batch_specs``) and decode
-  caches (``cache_specs``), plus the ``dp_axes`` mesh helper.
+  caches (``cache_specs``), plus the :class:`Placement` policy object
+  that selects the TP/FSDP axes and the ``dp_axes`` mesh helper.
+* :mod:`repro.dist.fsdp` — fully-sharded data parallelism around the
+  train step: all-gather of the bf16 working copy, reduce-scatter of
+  gradients, TrainState sharding trees for launch + elastic resume, and
+  per-device byte accounting.
 
 Convention (see ROADMAP): the ``model`` mesh axis carries tensor/expert
-parallelism; every other axis (``data``, ``pod``) is data parallelism.
+parallelism; every other axis (``data``, ``fsdp``, ``pod``) carries data
+parallelism — with parameters and optimizer state additionally sharded
+over the placement's FSDP axis when one is set.
 """
 from repro.dist.axes import (ActivationSharding, activation_sharding,
                              current_sharding, padded_head_count,
                              shard_batch, shard_heads)
-from repro.dist.partition import (batch_specs, cache_specs, dp_axes, dp_size,
+from repro.dist.fsdp import (all_gather_params, gather_specs,
+                             per_device_bytes, reduce_scatter_grads,
+                             train_state_shardings)
+from repro.dist.partition import (Placement, batch_specs, cache_specs,
+                                  default_placement, dp_axes, dp_size,
                                   param_specs, state_shardings)
 
 __all__ = [
     "ActivationSharding", "activation_sharding", "current_sharding",
     "padded_head_count", "shard_batch", "shard_heads",
+    "Placement", "default_placement",
     "batch_specs", "cache_specs", "dp_axes", "dp_size",
     "param_specs", "state_shardings",
+    "all_gather_params", "gather_specs", "per_device_bytes",
+    "reduce_scatter_grads", "train_state_shardings",
 ]

@@ -1,16 +1,26 @@
 """PartitionSpec inference over model / optimizer / batch / cache pytrees.
 
-Placement policy (this PR's scaling axis — pure DP × TP; FSDP is a later
-ROADMAP item):
+Placement policy — an explicit :class:`Placement` object selects which
+mesh axes carry which kind of parallelism:
 
-* ``model`` axis — Megatron-style tensor parallelism inferred from leaf
-  *names*: column-parallel projections shard their output features,
-  row-parallel projections their input features, embeddings their vocab
-  rows. Expert tensors shard the FFN feature dim (TP-in-expert). Anything
-  unrecognized, non-divisible, or numerically delicate (router, norms,
-  biases, SSM ``A_log``/gate vectors) stays replicated.
-* every other axis (``data``, ``pod``) — data parallelism: parameters are
-  replicated across it; batches and decode caches shard their batch dim.
+* ``tp_axis`` (default ``model``) — Megatron-style tensor parallelism
+  inferred from leaf *names*: column-parallel projections shard their
+  output features, row-parallel projections their input features,
+  embeddings their vocab rows. Expert tensors shard the FFN feature dim
+  (TP-in-expert). Anything unrecognized, non-divisible, or numerically
+  delicate (router, norms, biases, SSM ``A_log``/gate vectors) stays
+  replicated.
+* ``fsdp_axis`` (default off) — fully-sharded data parallelism: each
+  parameter leaf is additionally sharded on the *largest* dimension
+  divisible by the axis size that the TP rule did not already claim.
+  Small/indivisible leaves fall back to replication. The train step
+  (:func:`repro.train.step.make_fsdp_train_step`) all-gathers a working
+  copy around forward/backward and reduce-scatters gradients, so the
+  optimizer update — including Kahan compensation and SR residuals —
+  only ever touches the local shard.
+* every remaining axis (``data``, ``pod``) — plain data parallelism:
+  parameters are replicated across it; batches and decode caches shard
+  their batch dim over *all* non-TP axes (FSDP included).
 
 Stacked-layer leaves (``lax.scan`` over a leading layer/group dim — see
 ``repro.models.transformer``) are recognized by their root key so rules
@@ -19,22 +29,64 @@ index dimensions from the *end* of the shape.
 ``state_shardings`` aligns optimizer state with the parameter specs
 structurally: any sub-pytree shaped exactly like the parameter tree
 (moments, Kahan compensation, SR-residual buffers) inherits the parameter
-specs leaf-for-leaf; scalars (bias-correction c₁/c₂) replicate.
+specs leaf-for-leaf — co-sharding every per-weight buffer with its weight
+— while scalars (bias-correction c₁/c₂) replicate.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["MODEL_AXIS", "dp_axes", "dp_size", "param_specs",
-           "state_shardings", "batch_specs", "cache_specs"]
+__all__ = ["MODEL_AXIS", "DATA_AXIS", "POD_AXIS", "FSDP_AXIS", "KNOWN_AXES",
+           "Placement", "default_placement", "dp_axes", "dp_size",
+           "param_specs", "state_shardings", "batch_specs", "cache_specs"]
 
 PyTree = Any
 
 MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+FSDP_AXIS = "fsdp"
+# Every mesh axis name the stack understands, outermost-first.
+KNOWN_AXES = (POD_AXIS, DATA_AXIS, FSDP_AXIS, MODEL_AXIS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Which mesh axes carry parameter sharding.
+
+    ``tp_axis`` names the tensor-parallel axis (name-rule sharding);
+    ``fsdp_axis`` — when set — additionally shards every parameter leaf
+    (and, via ``state_shardings``, every optimizer buffer) over that axis.
+    Axes absent from the mesh are treated as size 1, so one Placement can
+    serve meshes of different topology.
+    """
+    fsdp_axis: Optional[str] = None
+    tp_axis: Optional[str] = MODEL_AXIS
+
+    def tp_size(self, mesh) -> int:
+        if self.tp_axis is None or self.tp_axis not in mesh.axis_names:
+            return 1
+        return mesh.shape[self.tp_axis]
+
+    def fsdp_size(self, mesh) -> int:
+        if self.fsdp_axis is None or self.fsdp_axis not in mesh.axis_names:
+            return 1
+        return mesh.shape[self.fsdp_axis]
+
+
+def default_placement(mesh, *, fsdp: bool = False) -> Placement:
+    """DP×TP placement, or FSDP over the mesh's ``fsdp`` axis when it has
+    one (falling back to sharding over ``data`` — the classic ZeRO-3
+    layout) when ``fsdp=True``."""
+    if not fsdp:
+        return Placement()
+    axis = FSDP_AXIS if FSDP_AXIS in mesh.axis_names else DATA_AXIS
+    return Placement(fsdp_axis=axis)
 
 # Column-parallel: shard the output-feature (last) dim of the kernel.
 _COL_PARALLEL = frozenset({
@@ -83,10 +135,20 @@ def _names(path) -> list[str]:
     return out
 
 
-def param_specs(params: PyTree, cfg, mesh) -> PyTree:
-    """PartitionSpec per parameter leaf (same tree structure as ``params``)."""
-    del cfg  # rules are name/shape-driven; cfg kept for future FSDP policies
-    mp = _mp_size(mesh)
+def param_specs(params: PyTree, cfg, mesh,
+                placement: Placement | None = None) -> PyTree:
+    """PartitionSpec per parameter leaf (same tree structure as ``params``).
+
+    ``placement=None`` keeps the historic DP×TP behaviour
+    (``Placement()``). With ``placement.fsdp_axis`` set, each leaf is
+    additionally sharded on its largest divisible dimension not already
+    claimed by tensor parallelism; leaves with no such dimension
+    (scalars, odd-sized vectors) replicate over the FSDP axis.
+    """
+    del cfg  # rules are name/shape-driven; cfg kept for future policies
+    placement = placement or Placement()
+    mp = placement.tp_size(mesh)
+    fs = placement.fsdp_size(mesh)
 
     def spec(path, leaf):
         ndim = len(leaf.shape)
@@ -107,10 +169,25 @@ def param_specs(params: PyTree, cfg, mesh) -> PyTree:
                 elif base in _ROW_PARALLEL:
                     dim = ndim - 2
             if dim is not None and leaf.shape[dim] % mp == 0:
-                parts[dim] = MODEL_AXIS
+                parts[dim] = placement.tp_axis
+        if fs > 1 and ndim:
+            fdim = _fsdp_dim(leaf.shape, parts, fs)
+            if fdim is not None:
+                parts[fdim] = placement.fsdp_axis
         return P(*parts)
 
     return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def _fsdp_dim(shape, parts, fs: int) -> int | None:
+    """Largest dimension divisible by ``fs`` that no axis already claims."""
+    best = None
+    for dim, extent in enumerate(shape):
+        if parts[dim] is not None or extent == 0 or extent % fs:
+            continue
+        if best is None or extent > shape[best]:
+            best = dim
+    return best
 
 
 def state_shardings(pspecs: PyTree, opt_shape: PyTree, mesh) -> PyTree:

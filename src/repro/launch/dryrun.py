@@ -32,7 +32,8 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import batch_struct, input_specs
 from repro.models import registry as R
 from repro.optim import adamw, constant, sgd
-from repro.train.step import make_serve_step, make_train_step
+from repro.train.step import (make_fsdp_train_step, make_serve_step,
+                              make_train_step)
 from repro.train.train_state import TrainState
 
 
@@ -55,7 +56,8 @@ def runnable(arch: str, shape_name: str) -> tuple[bool, str]:
 
 def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr",
                save_hlo: Path | None = None, moe_strategy: str | None = None,
-               attn_chunk: int = 1024) -> dict:
+               attn_chunk: int = 1024,
+               placement: PT.Placement | None = None) -> dict:
     import dataclasses as _dc
     cfg = R.get_config(arch)
     if moe_strategy:
@@ -67,7 +69,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
     pdtype = policy.param_dtype
 
     params_shape = jax.eval_shape(lambda: R.init(cfg, jax.random.PRNGKey(0), pdtype))
-    pspecs = PT.param_specs(params_shape, cfg, mesh)
+    pspecs = PT.param_specs(params_shape, cfg, mesh, placement)
     params_in = _sds(params_shape, pspecs, mesh)
     dp = PT.dp_axes(mesh)
     dp_size = 1
@@ -85,7 +87,11 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
         batch_shape = input_specs(cfg, shape, compute_dtype=policy.compute_dtype)
         bspecs = PT.batch_specs(batch_shape, mesh)
         batch_in = _sds(batch_shape, bspecs, mesh)
-        step_fn = make_train_step(cfg, policy, opt, constant(1e-4))
+        if placement is not None and placement.fsdp_axis is not None:
+            step_fn = make_fsdp_train_step(cfg, policy, opt, constant(1e-4),
+                                           pspecs=pspecs, placement=placement)
+        else:
+            step_fn = make_train_step(cfg, policy, opt, constant(1e-4))
         with mesh, activation_sharding(dp, dp_size, "model", mesh.shape["model"]):
             lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
                 state_in, batch_in, jax.ShapeDtypeStruct((), jnp.int32))
@@ -186,6 +192,9 @@ def main():
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--moe", default=None, choices=[None, "onehot", "grouped", "gather"])
+    ap.add_argument("--fsdp", action="store_true",
+                    help="FSDP placement: shard params + optimizer state "
+                         "over the mesh's data axis")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
 
@@ -217,8 +226,11 @@ def main():
         if mesh_kind not in meshes:
             meshes[mesh_kind] = make_production_mesh(multi_pod=(mesh_kind == "multi"))
         try:
+            placement = PT.default_placement(meshes[mesh_kind],
+                                             fsdp=args.fsdp)
             rec = lower_cell(arch, shape_name, meshes[mesh_kind],
                              policy_name=args.policy, moe_strategy=args.moe,
+                             placement=placement,
                              save_hlo=(out / f"{tag}.hlo") if args.save_hlo else None)
             path.write_text(json.dumps(rec, indent=1))
             r = rec["roofline"]

@@ -1,22 +1,61 @@
-"""Production mesh builders (per spec: function, no module-level jax state)."""
+"""Production mesh builders (per spec: function, no module-level jax state).
+
+Axis names are validated against the :mod:`repro.dist.partition`
+constants so a typo'd mesh can never silently replicate what the
+placement meant to shard.
+"""
 from __future__ import annotations
 
 import jax
 
+from repro.dist import partition as PT
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """Single-pod (16×16 = 256 chips) or 2-pod (2×16×16 = 512 chips) mesh.
-
-    Axes: ``data`` carries DP+FSDP, ``model`` carries TP/EP, ``pod`` is
-    pure DP across ICI domains (gradient all-reduce rides DCN).
-    """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def _validated_mesh(shape, axes):
+    unknown = [a for a in axes if a not in PT.KNOWN_AXES]
+    if unknown:
+        raise ValueError(
+            f"unknown mesh axis name(s) {unknown}; the partition rules "
+            f"understand {list(PT.KNOWN_AXES)}")
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"duplicate mesh axis names: {axes}")
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU)."""
-    return jax.make_mesh((data, model), ("data", "model"))
+def make_production_mesh(*, multi_pod: bool = False, fsdp: int = 1):
+    """Single-pod (16×16 = 256 chips) or 2-pod (2×16×16 = 512 chips) mesh.
+
+    Axes: ``data`` carries DP, ``model`` carries TP/EP, ``pod`` is pure DP
+    across ICI domains (gradient all-reduce rides DCN). ``fsdp > 1``
+    carves an ``fsdp`` axis of that size out of the 16-wide data dim —
+    batches still shard over ``data × fsdp`` (both are data axes), while
+    params + optimizer state shard over ``fsdp`` under an FSDP placement.
+    """
+    if fsdp > 1:
+        if 16 % fsdp:
+            raise ValueError(f"fsdp={fsdp} must divide the 16-wide data dim")
+        shape = (16 // fsdp, fsdp, 16)
+        axes = (PT.DATA_AXIS, PT.FSDP_AXIS, PT.MODEL_AXIS)
+    else:
+        shape = (16, 16)
+        axes = (PT.DATA_AXIS, PT.MODEL_AXIS)
+    if multi_pod:
+        shape = (2,) + shape
+        axes = (PT.POD_AXIS,) + axes
+    return _validated_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1, fsdp: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU).
+
+    ``fsdp > 1`` adds a dedicated ``fsdp`` axis between ``data`` and
+    ``model`` (e.g. ``make_local_mesh(2, 2, fsdp=2)`` is the 8-device
+    2 data × 2 fsdp × 2 model test topology); otherwise the historic
+    two-axis layout is kept so existing callers see the same mesh.
+    """
+    if fsdp > 1:
+        return _validated_mesh((data, fsdp, model),
+                               (PT.DATA_AXIS, PT.FSDP_AXIS, PT.MODEL_AXIS))
+    return _validated_mesh((data, model), (PT.DATA_AXIS, PT.MODEL_AXIS))

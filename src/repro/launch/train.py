@@ -7,6 +7,14 @@
 On a real cluster this same entry point runs under ``jax.distributed``
 (one process per host; see README §Deployment); the mesh axes and
 activation-sharding context are installed exactly as in the dry-run.
+
+``--fsdp`` shards parameters *and* all optimizer state (moments, Kahan
+compensation, SR residuals) over the data axes — a dedicated ``fsdp``
+axis when ``--fsdp-parallel > 1`` gives one, otherwise the ``data`` axis
+itself — and switches to the gather/scatter step builder. The TrainState
+sharding tree is also handed to ``run_training`` so an elastic
+checkpoint resume re-shards restored state (Kahan buffers included) onto
+the *current* mesh instead of restoring it unsharded.
 """
 from __future__ import annotations
 
@@ -17,12 +25,14 @@ import jax.numpy as jnp
 
 from repro.core.policy import get_policy
 from repro.data.synthetic import lm_batches
+from repro.dist import fsdp as F
 from repro.dist import partition as PT
 from repro.dist.axes import activation_sharding
+from repro.launch.mesh import make_local_mesh
 from repro.models import registry as R
 from repro.optim import adamw, linear_warmup_cosine
 from repro.train.loop import TrainLoopConfig, run_training
-from repro.train.step import make_train_step
+from repro.train.step import make_fsdp_train_step, make_train_step
 from repro.train.train_state import make_train_state
 
 
@@ -41,6 +51,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--fsdp-parallel", type=int, default=1,
+                    help="size of a dedicated fsdp mesh axis (implies --fsdp)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params + optimizer state (incl. Kahan "
+                         "buffers) over the data axes")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -50,32 +65,41 @@ def main():
     params = R.init(cfg, jax.random.PRNGKey(args.seed), policy.param_dtype)
     opt = adamw(policy, b2=0.997, weight_decay=0.01)
     state = make_train_state(params, opt)
-    step_fn = make_train_step(
-        cfg, policy, opt,
-        linear_warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps),
-        attn_chunk=min(1024, args.seq))
+    lr_schedule = linear_warmup_cosine(
+        args.lr, max(args.steps // 20, 1), args.steps)
 
-    dp, mp = args.data_parallel, args.model_parallel
-    if dp * mp > 1:
-        mesh = jax.make_mesh((dp, mp), ("data", "model"))
-        pspecs = PT.param_specs(state.params, cfg, mesh)
-        from jax.sharding import NamedSharding
-        shard = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), pspecs,
-            is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval"))
-        state = state._replace(params=jax.device_put(state.params, shard))
-        with mesh, activation_sharding(("data",), dp, "model", mp):
-            _run(state, step_fn, cfg, args)
+    dp, mp, fp = args.data_parallel, args.model_parallel, args.fsdp_parallel
+    use_fsdp = args.fsdp or fp > 1
+    if dp * mp * fp > 1:
+        mesh = make_local_mesh(dp, mp, fsdp=fp)
+        placement = PT.default_placement(mesh, fsdp=use_fsdp)
+        pspecs = PT.param_specs(state.params, cfg, mesh, placement)
+        shardings = F.train_state_shardings(state, cfg, mesh, placement)
+        state = jax.device_put(state, shardings)
+        if use_fsdp:
+            step_fn = make_fsdp_train_step(
+                cfg, policy, opt, lr_schedule, pspecs=pspecs,
+                placement=placement, attn_chunk=min(1024, args.seq))
+        else:
+            step_fn = make_train_step(cfg, policy, opt, lr_schedule,
+                                      attn_chunk=min(1024, args.seq))
+        dp_axes = PT.dp_axes(mesh)
+        with mesh, activation_sharding(dp_axes, PT.dp_size(mesh),
+                                       PT.MODEL_AXIS, mp):
+            _run(state, step_fn, cfg, args, state_shardings=shardings)
     else:
+        step_fn = make_train_step(cfg, policy, opt, lr_schedule,
+                                  attn_chunk=min(1024, args.seq))
         _run(state, step_fn, cfg, args)
 
 
-def _run(state, step_fn, cfg, args):
+def _run(state, step_fn, cfg, args, state_shardings=None):
     batches = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
     state, info = run_training(
         state, jax.jit(step_fn), batches,
         TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                        ckpt_every=args.ckpt_every, seed=args.seed))
+                        ckpt_every=args.ckpt_every, seed=args.seed),
+        state_shardings=state_shardings)
     last = info["history"][-1] if info["history"] else {}
     print(f"[train] done at step {int(jax.device_get(state.step))}; "
           f"final loss {last.get('loss'):.4f}; "

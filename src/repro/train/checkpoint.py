@@ -133,7 +133,7 @@ def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
     out = []
     for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
         arr = data[f"a{i}"]
-        want_dtype = jax.numpy.asarray(ref).dtype if hasattr(ref, "dtype") else None
+        want_dtype = ref.dtype if hasattr(ref, "dtype") else None
         if manifest["dtypes"][i] == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16)
         if list(arr.shape) != manifest["shapes"][i]:
@@ -141,6 +141,11 @@ def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
         if tuple(arr.shape) != tuple(np.shape(ref)):
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != model {np.shape(ref)}")
+        if want_dtype is not None and arr.dtype != want_dtype:
+            # elastic across *policies* too: a run restarted under a
+            # different precision policy restores into its own storage
+            # format (fp32 master ckpt → bf16 resume and vice versa)
+            arr = arr.astype(want_dtype)
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:

@@ -6,6 +6,12 @@ optimizer. Precision flows per the paper: forward/backward run in the
 policy's compute format (master-copy policies cast a bf16 working copy of
 the weights for compute), gradients land in bf16 and feed the quantized
 optimizer update (Algorithms 2–5).
+
+``make_fsdp_train_step`` is the FSDP variant: parameters and optimizer
+state arrive sharded over the placement's FSDP axis; the step all-gathers
+a compute-format (bf16-wire) working copy for forward/backward, lands
+gradients on the parameter shard layout, and runs the quantized update —
+Kahan compensation included — purely on local shards.
 """
 from __future__ import annotations
 
@@ -18,11 +24,13 @@ import jax.numpy as jnp
 from repro.core.formats import round_nearest
 from repro.core.policy import PrecisionPolicy
 from repro.core.qarith import QArith
+from repro.dist import fsdp as F
+from repro.dist.partition import Placement
 from repro.models import registry as R
 from repro.train.train_state import TrainState, softmax_xent
 
-__all__ = ["make_train_step", "make_eval_step", "make_serve_step",
-           "compute_params"]
+__all__ = ["make_train_step", "make_fsdp_train_step", "make_eval_step",
+           "make_serve_step", "compute_params"]
 
 PyTree = Any
 
@@ -44,8 +52,18 @@ def compute_params(params: PyTree, policy: PrecisionPolicy) -> PyTree:
 
 def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
                     *, remat: bool = True, attn_chunk: int = 1024,
-                    loss_fn: Callable | None = None):
+                    loss_fn: Callable | None = None,
+                    pspecs: PyTree | None = None,
+                    placement: Placement | None = None):
+    """One builder for both placements: plain DP×TP and FSDP.
+
+    Without ``pspecs``/``placement`` (or with a placement whose FSDP axis
+    is unset) this is the classic step. With them, the FSDP collectives
+    wrap the same body — see :func:`make_fsdp_train_step`.
+    """
     qa = QArith(policy)
+    fsdp = (pspecs is not None and placement is not None
+            and placement.fsdp_axis is not None)
 
     def _loss(params, batch):
         logits = R.forward_logits(qa, params, cfg, batch, remat=remat,
@@ -56,19 +74,56 @@ def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
 
     def train_step(state: TrainState, batch, seed) -> tuple[TrainState, dict]:
         key = jax.random.fold_in(jax.random.PRNGKey(seed), state.step)
-        wc = compute_params(state.params, policy)
+        wc = compute_params(state.params, policy)      # local-shard cast
+        if fsdp:
+            wc = F.all_gather_params(wc, pspecs, placement)  # bf16 wire
         loss, grads = jax.value_and_grad(_loss)(wc, batch)
         # grads arrive in the compute dtype (bf16 FMAC outputs); the
         # quantized optimizer consumes them per Algorithms 2–5.
+        if fsdp:
+            grads = F.reduce_scatter_grads(grads, pspecs, placement)
         lr = lr_schedule(state.step)
         new_params, new_opt = optimizer.update(
             grads, state.opt_state, state.params,
             step=state.step, key=key, lr=lr)
+        if fsdp:
+            new_params = F.constrain(new_params, pspecs)     # stay sharded
         metrics = {"loss": loss.astype(jnp.float32), "lr": lr,
                    "grad_norm": _global_norm(grads)}
         return TrainState(state.step + 1, new_params, new_opt), metrics
 
     return train_step
+
+
+def make_fsdp_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
+                         *, pspecs: PyTree, placement: Placement,
+                         remat: bool = True, attn_chunk: int = 1024,
+                         loss_fn: Callable | None = None):
+    """FSDP-aware train step (params + optimizer state sharded per ``pspecs``).
+
+    Collective structure per step:
+
+    1. the storage shards are cast to the compute format *locally*, then
+       all-gathered into the full working copy — a bf16-wire gather for
+       16-bit policies, half the bytes of gathering fp32 masters;
+    2. forward/backward run on the gathered copy (batch sharded over all
+       data axes, FSDP axis included);
+    3. gradients are constrained onto the parameter shard layout so the
+       cross-replica sum can lower to a reduce-scatter (backend-
+       dependent — see :func:`repro.dist.fsdp.reduce_scatter_grads`) and
+       the update consumes only local gradient shards;
+    4. the quantized optimizer update (Algorithms 2–5) runs leafwise on
+       local shards only: moments, Kahan compensation and SR residuals
+       are co-sharded with their parameter, so Algorithm 5's ``c`` buffer
+       accumulates against the local shard, never the gathered copy.
+
+    Outside a mesh (or with no FSDP axis in the placement) every
+    collective helper is a no-op and this reduces to ``make_train_step``
+    — which is also literally what it delegates to.
+    """
+    return make_train_step(cfg, policy, optimizer, lr_schedule, remat=remat,
+                           attn_chunk=attn_chunk, loss_fn=loss_fn,
+                           pspecs=pspecs, placement=placement)
 
 
 def _global_norm(tree: PyTree) -> jax.Array:

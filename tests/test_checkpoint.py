@@ -45,6 +45,33 @@ class TestSaveRestore:
         assert len(steps) == 2
         assert steps[-1] == "step_000000005"
 
+    def test_mixed_dtype_roundtrip_casts_to_like(self, tmp_path):
+        """Restoring into a tree of different dtypes casts leaf-for-leaf to
+        the dtype of ``like`` — the policy-elastic path (fp32 master ckpt
+        resumed under a bf16 policy and vice versa), mixed trees included."""
+        t = {"w": jnp.linspace(-2, 2, 32, dtype=jnp.float32).reshape(8, 4),
+             "m": jnp.linspace(0, 1, 8, dtype=jnp.bfloat16),
+             "step": jnp.int32(3)}
+        C.save(tmp_path, 1, t)
+        like = {"w": jnp.zeros((8, 4), jnp.bfloat16),     # f32 → bf16
+                "m": jnp.zeros((8,), jnp.float32),        # bf16 → f32
+                "step": jnp.int32(0)}                     # unchanged
+        got, _ = C.restore(tmp_path, like)
+        assert got["w"].dtype == jnp.bfloat16
+        assert got["m"].dtype == jnp.float32
+        assert got["step"].dtype == jnp.int32 and int(got["step"]) == 3
+        assert bool(jnp.all(got["w"] == t["w"].astype(jnp.bfloat16)))
+        # bf16 values are exactly representable in f32: lossless widen
+        assert bool(jnp.all(got["m"] == t["m"].astype(jnp.float32)))
+
+    def test_same_dtype_roundtrip_stays_bitexact(self, tmp_path):
+        t = _tree()
+        C.save(tmp_path, 2, t)
+        got, _ = C.restore(tmp_path, jax.tree_util.tree_map(jnp.zeros_like, t))
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(got)):
+            assert a.dtype == b.dtype and bool(jnp.all(a == b))
+
     def test_structure_mismatch_rejected(self, tmp_path):
         C.save(tmp_path, 1, _tree())
         with pytest.raises(ValueError):
