@@ -21,6 +21,7 @@ SECTIONS = [
     ("appB_kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
     ("fsdp_memory", "benchmarks.bench_fsdp"),
+    ("serve_batching", "benchmarks.bench_serve"),
 ]
 
 

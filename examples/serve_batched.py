@@ -1,23 +1,46 @@
-"""Batched serving example: prefill + greedy decode with a KV cache on the
-recurrentgemma hybrid (exercises RG-LRU state + local-attention ring cache).
+"""Continuous-batching serving example: staggered requests through the
+engine on the recurrentgemma hybrid (RG-LRU state + local-attention ring
+cache) and falcon-mamba (pure SSM state), with the KV/state pool stored
+in the policy's value dtype (bf16 for every 16-bit policy — pass
+``--policy bf16_sr`` (default) to exercise bf16 cache writes under the
+stochastic-rounding policy, or ``--policy fp32`` for an f32 pool).
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --policy bf16_sr_kahan
 """
+import argparse
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
+import numpy as np
 
 from repro.core import get_policy
 from repro.models import registry as R
-from repro.serve.decode import generate
+from repro.serve import Engine
 
-policy = get_policy("bf16_sr")
+ap = argparse.ArgumentParser()
+ap.add_argument("--policy", default="bf16_sr",
+                help="precision policy (see repro/core/policy.py)")
+args = ap.parse_args()
+policy = get_policy(args.policy)
+
+rng = np.random.default_rng(0)
 for arch in ("recurrentgemma-2b", "falcon-mamba-7b"):
     cfg = R.get_config(arch).reduced()
     params = R.init(cfg, jax.random.PRNGKey(0), policy.param_dtype)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, cfg.vocab)
-    out = generate(params, cfg, policy, prompts, max_new_tokens=10)
-    print(f"[serve] {arch}: {out.shape} — continuations:\n{out[:, 6:]}")
+    engine = Engine(params, cfg, policy, n_slots=4, max_len=24)
+    # 6 staggered requests over 4 slots: the first evictions refill
+    # mid-flight, which is the whole point of continuous batching
+    for s0, gen in ((6, 10), (4, 8), (5, 10), (6, 6), (3, 8), (4, 10)):
+        engine.submit(rng.integers(0, cfg.vocab, size=s0).astype(np.int32), gen)
+    done = engine.run()
+    st = engine.stats
+    print(f"[serve] {arch} policy={policy.name} "
+          f"kv_dtype={np.dtype(engine.pool.dtype).name}: "
+          f"{st.finished} requests in {st.steps} steps, "
+          f"utilization {st.utilization:.0%}")
+    for c in sorted(done, key=lambda c: c.rid):
+        print(f"  rid={c.rid} prompt={c.prompt.size} → {c.tokens.tolist()}")

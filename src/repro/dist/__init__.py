@@ -9,9 +9,11 @@ Three modules, all mesh-shape-agnostic (they read axis *names*, not sizes):
   training and the CPU smoke tests never see a sharding constraint.
 * :mod:`repro.dist.partition` — PartitionSpec inference over pytrees:
   parameters (``param_specs``), optimizer state incl. Kahan/SR buffers
-  (``state_shardings``), input batches (``batch_specs``) and decode
-  caches (``cache_specs``), plus the :class:`Placement` policy object
-  that selects the TP/FSDP axes and the ``dp_axes`` mesh helper.
+  (``state_shardings``), input batches (``batch_specs``), decode caches
+  (``cache_specs`` — slot axis on data, heads/channels on model; the
+  serving engine's KV pool placement) and the slot-indexed serve-step
+  inputs (``serve_input_specs``), plus the :class:`Placement` policy
+  object that selects the TP/FSDP axes and the ``dp_axes`` mesh helper.
 * :mod:`repro.dist.fsdp` — fully-sharded data parallelism around the
   train step: all-gather of the bf16 working copy, reduce-scatter of
   gradients, TrainState sharding trees for launch + elastic resume, and
@@ -30,14 +32,15 @@ from repro.dist.fsdp import (all_gather_params, gather_specs,
                              train_state_shardings)
 from repro.dist.partition import (Placement, batch_specs, cache_specs,
                                   default_placement, dp_axes, dp_size,
-                                  param_specs, state_shardings)
+                                  param_specs, serve_input_specs,
+                                  state_shardings)
 
 __all__ = [
     "ActivationSharding", "activation_sharding", "current_sharding",
     "padded_head_count", "shard_batch", "shard_heads",
     "Placement", "default_placement",
     "batch_specs", "cache_specs", "dp_axes", "dp_size",
-    "param_specs", "state_shardings",
+    "param_specs", "serve_input_specs", "state_shardings",
     "all_gather_params", "gather_specs", "per_device_bytes",
     "reduce_scatter_grads", "train_state_shardings",
 ]

@@ -42,8 +42,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["MODEL_AXIS", "DATA_AXIS", "POD_AXIS", "FSDP_AXIS", "KNOWN_AXES",
-           "Placement", "default_placement", "dp_axes", "dp_size",
-           "param_specs", "state_shardings", "batch_specs", "cache_specs"]
+           "STACKED_CACHE_ROOTS", "Placement", "default_placement",
+           "dp_axes", "dp_size", "param_specs", "state_shardings",
+           "batch_specs", "cache_specs", "serve_input_specs"]
 
 PyTree = Any
 
@@ -104,8 +105,12 @@ _ROW_PARALLEL = frozenset({
 })
 # Root keys whose leaves carry a leading stacked-layer dim.
 _STACKED_ROOTS = frozenset({"layers", "enc_layers", "dec_layers"})
-# Decode-cache roots with a leading stacked-layer dim.
-_STACKED_CACHE_ROOTS = _STACKED_ROOTS | {"self", "cross"}
+#: Decode-cache roots whose leaves carry a leading stacked-layer dim, so
+#: the batch/slot dim sits at index 1 instead of 0. Shared with
+#: :mod:`repro.serve.cache`, which uses the same convention to locate the
+#: slot axis for per-slot reset / lane-masking.
+STACKED_CACHE_ROOTS = _STACKED_ROOTS | {"self", "cross"}
+_STACKED_CACHE_ROOTS = STACKED_CACHE_ROOTS
 
 
 def dp_axes(mesh) -> tuple[str, ...]:
@@ -239,13 +244,24 @@ def batch_specs(batch: PyTree, mesh) -> PyTree:
 
 
 def cache_specs(cache: PyTree, cfg, mesh) -> PyTree:
-    """Specs for decode caches: batch dim on data, head/channel on model.
+    """Specs for decode caches: slot/batch dim on data, head/channel on model.
 
     Handles the three cache families (see ``repro.models``): attention KV
-    ring buffers ``(…, B, S, H_kv, hd)`` + position maps ``(…, B, S)``,
-    Mamba ``{"conv": (…, B, W−1, d_inner), "h": (…, B, d_inner, N)}`` and
-    RG-LRU ``{"conv": (…, B, W−1, W), "h": (…, B, W)}``, each optionally
-    stacked under a leading scanned-layer dim.
+    ring buffers ``(…, N, S, H_kv, hd)`` + position maps ``(…, N, S)``,
+    Mamba ``{"conv": (…, N, W−1, d_inner), "h": (…, N, d_inner, N_ssm)}``
+    and RG-LRU ``{"conv": (…, N, W−1, W), "h": (…, N, W)}``, each
+    optionally stacked under a leading scanned-layer dim (see
+    :data:`STACKED_CACHE_ROOTS`).
+
+    The leading cache dimension ``N`` is the *slot* axis: under lock-step
+    decode (``repro.serve.decode.generate``) it is the request batch; under
+    continuous batching (``repro.serve.engine.Engine``) it is the engine's
+    fixed slot pool, each slot independently admitted/evicted while the
+    buffer itself never changes shape. Either way it is sharded over every
+    data axis (all non-``model`` axes, FSDP included) when divisible, so
+    one sharded KV pool serves the whole mesh; head/channel dims shard
+    over the model axis exactly as the matching parameter does. Non-
+    divisible slot counts replicate.
     """
     del cfg
     dp = dp_axes(mesh)
@@ -276,3 +292,20 @@ def cache_specs(cache: PyTree, cfg, mesh) -> PyTree:
         return P(*parts)
 
     return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def serve_input_specs(n_slots: int, mesh) -> dict[str, P]:
+    """Specs for the slot-indexed serve-step inputs (see
+    :func:`repro.train.step.make_serve_step`).
+
+    All four inputs lead with the slot axis and co-shard with the cache
+    pool's slot dim over every data axis: ``token (N, 1) i32``,
+    ``pos (N,) i32``, ``active (N,) bool``, ``reset (N,) bool``. When
+    ``n_slots`` does not divide the data-parallel size everything
+    replicates — matching :func:`cache_specs`' fallback so token and
+    cache never disagree on slot placement.
+    """
+    dp = dp_axes(mesh)
+    slot = dp if (dp_size(mesh) > 1 and n_slots % dp_size(mesh) == 0) else None
+    return {"token": P(slot, None), "pos": P(slot),
+            "active": P(slot), "reset": P(slot)}

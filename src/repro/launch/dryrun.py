@@ -116,13 +116,25 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
         cspecs = PT.cache_specs(cache_shape, cfg, mesh)
         cache_in = _sds(cache_shape, cspecs, mesh)
         from jax.sharding import NamedSharding, PartitionSpec as P
-        tok_spec = P(dp if B % dp_size == 0 else None, None)
+        sspecs = PT.serve_input_specs(B, mesh)
+        tok_spec = sspecs["token"]
         token_in = jax.ShapeDtypeStruct((B, 1), jnp.int32,
                                         sharding=NamedSharding(mesh, tok_spec))
-        pos_in = jax.ShapeDtypeStruct((), jnp.int32)
         serve = make_serve_step(cfg, policy)
-        args = [params_in, cache_in, token_in, pos_in]
-        if cfg.family == "vlm":
+        if cfg.encdec:
+            # lock-step layout: scalar position (sinusoidal decoder pos-emb)
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+            args = [params_in, cache_in, token_in, pos_in]
+        else:
+            # slot-indexed serving layout: per-slot positions + lane masks,
+            # the executable the continuous-batching engine runs
+            pos_in = jax.ShapeDtypeStruct(
+                (B,), jnp.int32, sharding=NamedSharding(mesh, sspecs["pos"]))
+            lane = lambda k: jax.ShapeDtypeStruct(
+                (B,), jnp.bool_, sharding=NamedSharding(mesh, sspecs[k]))
+            args = [params_in, cache_in, token_in, pos_in,
+                    lane("active"), lane("reset")]
+        if cfg.family == "vlm":   # vlm is decoder-only → args has 6 entries
             args.append(jax.ShapeDtypeStruct(
                 (3, B, 1), jnp.int32,
                 sharding=NamedSharding(mesh, P(None, tok_spec[0], None))))

@@ -1,6 +1,19 @@
-"""Serving launcher: batched prefill+decode on a (reduced) model.
+"""Serving launcher: continuous-batching engine over a synthetic stream.
+
+Drives :class:`repro.serve.engine.Engine` with open-loop Poisson arrivals
+(exponential inter-arrival gaps measured in engine iterations — the
+deterministic analogue of wall-clock arrivals) and mixed prompt/generation
+lengths, then prints throughput + slot-utilization stats.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --policy bf16_sr_kahan --slots 16 --rate 0.5 --requests 64
+
+On a mesh (8 virtual devices: 4 data × 2 model, KV pool sharded on both):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --data-parallel 4 --model-parallel 2 --slots 8
 """
 from __future__ import annotations
 
@@ -8,11 +21,31 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import get_policy
 from repro.models import registry as R
-from repro.serve.decode import generate
+from repro.serve.engine import Engine
+
+
+def synthetic_stream(rng: np.random.Generator, n_requests: int, *,
+                     rate: float, prompt_lens: tuple[int, int],
+                     gen_lens: tuple[int, int], vocab: int):
+    """(arrival_step, prompt, max_new) triples with Poisson arrivals.
+
+    ``rate`` is requests per engine iteration; prompt/generation lengths
+    are drawn uniformly from their (lo, hi) ranges — the mixed-length
+    traffic that makes static batching pay for its stragglers.
+    """
+    t = 0.0
+    out = []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        s0 = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        gen = int(rng.integers(gen_lens[0], gen_lens[1] + 1))
+        prompt = rng.integers(0, vocab, size=s0).astype(np.int32)
+        out.append((int(t), prompt, gen))
+    return out
 
 
 def main():
@@ -20,10 +53,18 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--policy", default="bf16_sr")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrival rate, requests per engine step")
+    ap.add_argument("--prompt-lens", type=int, nargs=2, default=(4, 12))
+    ap.add_argument("--gen-lens", type=int, nargs=2, default=(4, 48))
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-parallel", type=int, default=0,
+                    help="mesh data-axis size (0 = no mesh)")
+    ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -31,17 +72,62 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     params = R.init(cfg, jax.random.PRNGKey(0), policy.param_dtype)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    mesh = None
+    if args.data_parallel:
+        mesh = jax.make_mesh((args.data_parallel, args.model_parallel),
+                             ("data", "model"))
+    engine = Engine(params, cfg, policy, n_slots=args.slots,
+                    max_len=args.max_len, mesh=mesh, eos_id=args.eos_id)
+
+    rng = np.random.default_rng(args.seed)
+    # every request must fit the pool: clamp generation lengths to what the
+    # longest prompt leaves room for, and reject impossible flag combos
+    hi = min(args.gen_lens[1], args.max_len - args.prompt_lens[1])
+    if hi < 1:
+        ap.error(f"--max-len {args.max_len} leaves no room to generate "
+                 f"after a {args.prompt_lens[1]}-token prompt; raise "
+                 f"--max-len or lower --prompt-lens")
+    stream = synthetic_stream(rng, args.requests, rate=args.rate,
+                              prompt_lens=tuple(args.prompt_lens),
+                              gen_lens=(min(args.gen_lens[0], hi), hi),
+                              vocab=cfg.vocab)
+    print(f"[serve] {args.arch} policy={policy.name} slots={args.slots} "
+          f"max_len={args.max_len} kv_dtype={np.dtype(engine.pool.dtype).name} "
+          f"pool={engine.pool.nbytes() / 2**20:.1f} MiB "
+          f"mesh={'x'.join(map(str, mesh.devices.shape)) if mesh else 'none'}")
+
     t0 = time.time()
-    out = generate(params, cfg, policy, prompts,
-                   max_new_tokens=args.max_new,
-                   temperature=args.temperature)
+    completions, queued = [], 0
+    latencies = []
+    while queued < len(stream) or engine.has_work():
+        while queued < len(stream) and stream[queued][0] <= engine.stats.steps:
+            _, prompt, gen = stream[queued]
+            engine.submit(prompt, gen)
+            queued += 1
+        if not engine.has_work():      # open-loop gap: idle until next arrival
+            engine.stats.steps += 1
+            engine.stats.slot_steps += engine.pool.n_slots
+            continue
+        for c in engine.step():
+            completions.append(c)
+            latencies.append(c.finished_step - c.admitted_step)
     dt = time.time() - t0
-    toks = args.batch * args.max_new
-    print(f"[serve] {out.shape} generated; {toks} new tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
-    print(out[:, args.prompt_len:])
+
+    st = engine.stats
+    print(f"[serve] {st.finished}/{args.requests} finished in {st.steps} "
+          f"steps ({dt:.2f}s incl. compile)")
+    print(f"[serve] {st.tokens_generated} tokens generated → "
+          f"{st.tokens_generated / dt:.1f} tok/s; slot utilization "
+          f"{st.utilization:.1%} (prefill share "
+          f"{st.prefill_slot_steps / max(st.active_slot_steps, 1):.1%})")
+    if latencies:
+        lat = np.asarray(latencies)
+        print(f"[serve] latency (engine steps): p50={np.percentile(lat, 50):.0f} "
+              f"p95={np.percentile(lat, 95):.0f} max={lat.max()}")
+    for c in completions[:4]:
+        print(f"  rid={c.rid} {c.finish_reason:6s} prompt={c.prompt.size:3d} "
+              f"gen={c.tokens.size:3d} tokens={c.tokens[:8].tolist()}…")
 
 
 if __name__ == "__main__":

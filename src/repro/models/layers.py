@@ -352,16 +352,33 @@ def attention_apply(qa: QArith, p, x, cfg, *, positions, causal=True,
 
     new_cache = None
     if cache is not None:
-        # cache_pos is a scalar step counter (whole batch decodes in lock-
-        # step); ring-buffer indexing (mod cache length) supports SWA/local
+        # cache_pos is either a scalar step counter (whole batch decodes in
+        # lock-step: train-style generate) or a per-lane (B,) position
+        # vector (continuous batching: every slot sits at its own depth).
+        # Ring-buffer indexing (mod cache length) supports SWA/local
         # windows where the cache is window-sized.
         k_cache, v_cache, k_pos = cache
         Sc = k_cache.shape[1]
         slot = cache_pos % Sc
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
-        k_pos = jax.lax.dynamic_update_slice_in_dim(
-            k_pos, positions.reshape(B, S).astype(k_pos.dtype), slot, axis=1)
+        if jnp.ndim(cache_pos) == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+            k_pos = jax.lax.dynamic_update_slice_in_dim(
+                k_pos, positions.reshape(B, S).astype(k_pos.dtype), slot, axis=1)
+        else:
+            # per-lane scatter: one new token per slot (S must be 1).
+            # Lanes with cache_pos < 0 are parked (continuous batching's
+            # `active` mask): their write index is routed out of range and
+            # dropped, so masking costs nothing on the KV pool.
+            assert S == 1, "per-lane cache_pos decodes one token per slot"
+            lane = jnp.arange(B)
+            slot = jnp.where(cache_pos >= 0, slot, Sc)
+            k_cache = k_cache.at[lane, slot].set(
+                k[:, 0].astype(k_cache.dtype), mode="drop")
+            v_cache = v_cache.at[lane, slot].set(
+                v[:, 0].astype(v_cache.dtype), mode="drop")
+            k_pos = k_pos.at[lane, slot].set(
+                positions.reshape(B).astype(k_pos.dtype), mode="drop")
         out = decode_attention(qa, q, k_cache, v_cache, k_pos,
                                q_pos=positions.reshape(B, S)[:, -1],
                                window=window, softcap=cfg.attn_logit_softcap)

@@ -219,10 +219,15 @@ def forward(qa: QArith, params, cfg, tokens, *, positions=None,
 def decode_step(qa: QArith, params, cfg, token, cache, cache_pos, *,
                 mrope_positions=None):
     """One decode step. token: (B,1) int32 (or (B,1,D) embeds); cache_pos:
-    scalar int32 position of this token. Returns (logits, new_cache)."""
+    int32 position of this token — a scalar when the whole batch decodes
+    in lock-step, or a (B,) vector when every lane sits at its own depth
+    (the continuous-batching slot layout). Returns (logits, new_cache)."""
     kinds, _, rem = _layer_plan(cfg)
     B = token.shape[0]
-    positions = jnp.broadcast_to(cache_pos[None, None], (B, 1)).astype(jnp.int32)
+    if jnp.ndim(cache_pos) == 0:
+        positions = jnp.broadcast_to(cache_pos[None, None], (B, 1)).astype(jnp.int32)
+    else:
+        positions = cache_pos.reshape(B, 1).astype(jnp.int32)
     x = shard_batch(_embed_tokens(qa, cfg, params, token))
 
     def group_body(x, inp):

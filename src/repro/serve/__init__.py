@@ -1,0 +1,36 @@
+"""Serving subsystem: lock-step decode + the continuous-batching engine.
+
+Three modules, mirroring the train-side split (step builder / state /
+driver):
+
+* :mod:`repro.serve.decode` — the reference lock-step path:
+  :func:`~repro.serve.decode.generate` prefills and greedily decodes one
+  fixed batch, every lane at the same position. It is the numerical
+  oracle the engine parity tests compare against.
+* :mod:`repro.serve.cache` — the slotted KV-cache pool:
+  :class:`~repro.serve.cache.CachePool` allocates the decode cache once
+  for ``n_slots`` lanes (bf16 storage with the per-policy value dtype,
+  sharded over the mesh via :func:`repro.dist.cache_specs`) plus the
+  functional per-slot ``reset_slots`` / ``keep_active`` helpers the
+  slot-indexed serve step is built from.
+* :mod:`repro.serve.engine` — continuous batching:
+  :class:`~repro.serve.engine.Engine` admits requests into free slots,
+  steps every active slot through one compiled
+  :func:`repro.train.step.make_serve_step` executable (prefill and
+  decode share the slot layout, so there is exactly one executable per
+  (mesh, policy)), evicts finished sequences on EOS/max-len and refills
+  mid-flight.
+
+The engine covers every decoder-only family (dense / GQA / MoE / SSM /
+hybrid); encoder–decoder models keep the lock-step ``generate`` path
+(their decode positions drive a scalar sinusoidal embedding).
+"""
+from repro.serve.cache import CachePool, cache_dtype, keep_active, reset_slots
+from repro.serve.decode import generate
+from repro.serve.engine import Completion, Engine, EngineStats, Request
+
+__all__ = [
+    "CachePool", "cache_dtype", "keep_active", "reset_slots",
+    "generate",
+    "Completion", "Engine", "EngineStats", "Request",
+]

@@ -1,0 +1,214 @@
+"""Slotted KV-cache pool + per-slot reset/masking primitives.
+
+The engine never reallocates: the decode cache is built **once** for
+``n_slots`` lanes and ``max_len`` positions, and requests are mapped onto
+slots. The cache PyTree is exactly what ``repro.models`` builds (see
+:func:`repro.models.registry.make_cache`), with the leading cache
+dimension reinterpreted as the *slot* axis:
+
+* attention KV ring buffers — ``k``/``v`` ``(N, S_c, H_kv, hd)`` in the
+  policy's value dtype (bf16 for every 16-bit policy) plus an ``i32``
+  position map ``(N, S_c)`` whose ``-1`` entries mark empty cells;
+  ``S_c = min(max_len, window)`` for sliding/local-attention layers
+  (ring-buffer semantics), ``max_len`` otherwise;
+* Mamba — ``{"conv": (N, W-1, d_inner) value-dtype, "h": (N, d_inner,
+  N_ssm) f32}`` (the SSM recurrence integrates in f32, matching the
+  FMAC accumulator);
+* RG-LRU — ``{"conv": (N, W-1, W) value-dtype, "h": (N, W) f32}``.
+
+Scanned layer stacks prepend a layer dim (roots listed in
+:data:`repro.dist.partition.STACKED_CACHE_ROOTS`), moving the slot axis
+to index 1 — both helpers below and ``cache_specs`` share that rule, so
+the slot a request lives in and the device its KV lives on never
+disagree.
+
+Slot lifecycle is purely functional and deliberately cheap on the KV
+pool: :func:`reset_slots` re-initializes a slot in-graph by resetting
+its position map to ``-1`` (making every stale KV cell unreachable —
+attention masks on the map, never on the values) and zeroing recurrent
+state; :func:`keep_active` carries parked lanes' recurrent state
+through (their KV writes are already dropped at the scatter site via
+``pos = -1``). Neither ever streams the KV value buffers, yet a
+recycled slot decodes bitwise-identically to a fresh cache. Both are
+consumed by the slot-indexed serve step
+(:func:`repro.train.step.make_serve_step`), which is what keeps
+admission + decode inside one compiled executable.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.qarith import QArith
+from repro.dist.partition import STACKED_CACHE_ROOTS, cache_specs
+from repro.models import registry as R
+
+__all__ = ["CachePool", "cache_dtype", "keep_active", "reset_slots",
+           "slot_count"]
+
+PyTree = Any
+
+
+def cache_dtype(policy: PrecisionPolicy):
+    """Value dtype for KV / conv state under ``policy``.
+
+    16-bit policies store cache values in their compute dtype (bf16 on
+    the paper's hardware model — KV bytes halve along with everything
+    else); fp32 and the simulated sub-16-bit grids (carried in f32) store
+    f32. Position maps are always ``i32`` and recurrent ``h`` states
+    always f32, regardless of policy.
+    """
+    return policy.compute_dtype
+
+
+def _names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return out
+
+
+def _slot_dim(path) -> int:
+    names = _names(path)
+    return 1 if names and names[0] in STACKED_CACHE_ROOTS else 0
+
+
+def _per_slot(mask: jax.Array, leaf: jax.Array, sdim: int) -> jax.Array:
+    """Broadcast a (N,) slot mask against ``leaf`` along its slot dim."""
+    shape = [1] * leaf.ndim
+    shape[sdim] = mask.shape[0]
+    return mask.reshape(shape)
+
+
+def _is_kv_value(path) -> bool:
+    """True for the k/v buffers of an attention cache tuple.
+
+    Attention caches are tuples ``(k, v, k_pos)`` — their floating
+    leaves are reached through a tuple index (``SequenceKey``) — while
+    SSM/RG-LRU state lives under dict keys (``conv``/``h``). The
+    distinction is what lets reset/masking skip the big KV pools: a KV
+    cell is dead the moment its position-map entry is −1, values
+    included, because attention masks on the map, never on the values.
+    """
+    return any(hasattr(k, "idx") for k in path)
+
+
+def reset_slots(cache: PyTree, reset: jax.Array) -> PyTree:
+    """Re-initialize the slots selected by ``reset`` ((N,) bool), in-graph.
+
+    Touches only the cheap leaves: integer position maps go to ``-1``
+    (which kills every KV cell of the slot — masked cells contribute
+    exact zeros to attention, so stale bf16 values behind them can stay)
+    and dict-keyed recurrent state (``conv``/``h``) to zero. The result
+    is *observationally* a fresh cache — recycled slots decode
+    bitwise-identically to a new pool (the parity tests lean on this) —
+    at O(position map + recurrent state) cost instead of a full-pool
+    rewrite per engine step.
+
+    Only valid for decoder-only caches: an encoder–decoder ``cross``
+    cache holds *precomputed* cross-attention K/V that slot recycling
+    would have to rebuild (the engine rejects encdec configs up front).
+    """
+
+    def one(path, leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            fresh = jnp.array(-1, leaf.dtype)          # position map
+        elif _is_kv_value(path):
+            return leaf                                # dead behind pos=−1
+        else:
+            fresh = jnp.array(0, leaf.dtype)           # conv / h state
+        return jnp.where(_per_slot(reset, leaf, _slot_dim(path)), fresh, leaf)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def keep_active(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
+    """Per-slot select: ``new`` where ``active`` ((N,) bool), else ``old``.
+
+    Protects parked slots' recurrent state (``conv``/``h`` are rewritten
+    wholesale every decode step, garbage included). Attention tuples
+    (k/v/position map) pass through untouched: parked lanes never write
+    them in the first place — the serve step routes their scatter index
+    out of range (``pos < 0`` ⇒ ``mode="drop"``, see
+    ``repro.models.layers.attention_apply``) — so masking them here
+    would only re-stream the whole KV pool for no semantic effect.
+    """
+
+    def one(path, n, o):
+        if _is_kv_value(path) or jnp.issubdtype(n.dtype, jnp.integer):
+            return n
+        return jnp.where(_per_slot(active, n, _slot_dim(path)), n, o)
+
+    return jax.tree_util.tree_map_with_path(one, new, old)
+
+
+def slot_count(cache: PyTree) -> int:
+    """Number of slots in a cache pytree (extent of the slot axis)."""
+    paths = jax.tree_util.tree_flatten_with_path(cache)[0]
+    path, leaf = paths[0]
+    return leaf.shape[_slot_dim(path)]
+
+
+class CachePool:
+    """One sharded decode-cache buffer + host-side slot bookkeeping.
+
+    The device side is a single allocation (``self.cache``) built by
+    ``make_cache`` for ``n_slots`` lanes; with a ``mesh`` it is placed
+    via :func:`repro.dist.cache_specs` — slot dim sharded over every data
+    axis, head/channel dims over ``model`` — so the pool is the sharded
+    KV buffer the whole mesh serves from. The host side is a FIFO free
+    list: :meth:`acquire` hands out slot ids, :meth:`release` returns
+    them; actual state reset happens in-graph via :func:`reset_slots`
+    (the engine passes the freshly acquired ids as the step's ``reset``
+    mask), so allocation never touches device memory.
+    """
+
+    def __init__(self, params, cfg, policy: PrecisionPolicy, *,
+                 n_slots: int, max_len: int, mesh=None):
+        if cfg.encdec:
+            raise ValueError("CachePool is decoder-only; encoder-decoder "
+                             "models serve via repro.serve.decode.generate")
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.dtype = cache_dtype(policy)
+        qa = QArith(policy)
+        cache = R.make_cache(qa, params, cfg, {}, batch_size=self.n_slots,
+                             max_len=self.max_len, dtype=self.dtype)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            specs = cache_specs(cache, cfg, mesh)
+            cache = jax.device_put(cache, jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval")))
+        self.cache = cache
+        self._free: deque[int] = deque(range(self.n_slots))
+
+    # -- slot bookkeeping ---------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        """Pop a free slot id (FIFO), or ``None`` when the pool is full."""
+        return self._free.popleft() if self._free else None
+
+    def release(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} released twice")
+        self._free.append(slot)
+
+    def nbytes(self) -> int:
+        """Total pool bytes (global, before sharding divides them)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.cache))

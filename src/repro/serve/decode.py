@@ -1,7 +1,16 @@
-"""Batched serving loop: prefill + greedy/temperature decode with KV cache."""
-from __future__ import annotations
+"""Lock-step serving: prefill + greedy/temperature decode with a KV cache.
 
-from typing import Any
+This is the reference (oracle) decode path: one fixed batch, every lane
+at the same position, prompt teacher-forced token-by-token through the
+same jitted decode step that samples the continuation — i.e. the scalar-
+``pos`` layout of :func:`repro.train.step.make_serve_step`. The
+continuous-batching engine (:mod:`repro.serve.engine`) must match it
+token-for-token under nearest rounding; ``cache_len`` exists so parity
+tests can pin the cache to the engine's pool length (attention reduces
+over the cache axis, so equal shapes ⇒ identical reduction order ⇒
+bitwise-equal logits).
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -9,25 +18,38 @@ import jax.numpy as jnp
 from repro.core.policy import PrecisionPolicy
 from repro.core.qarith import QArith
 from repro.models import registry as R
+from repro.serve.cache import cache_dtype
 
 __all__ = ["generate"]
 
 
 def generate(params, cfg, policy: PrecisionPolicy, prompts: jax.Array, *,
              max_new_tokens: int = 32, temperature: float = 0.0,
-             seed: int = 0) -> jax.Array:
+             seed: int = 0, cache_len: int | None = None) -> jax.Array:
     """prompts: (B, S_prompt) int32 → (B, S_prompt + max_new) int32.
 
     Prefill fills the cache token-by-token through the jitted decode step
     (teacher-forcing the prompt), then samples continuation tokens.
+    ``cache_len`` overrides the KV-cache length (default: exactly
+    ``S_prompt + max_new_tokens``); longer caches are masked out and
+    change nothing semantically.
     """
     qa = QArith(policy)
     B, S0 = prompts.shape
-    max_len = S0 + max_new_tokens
-    cache = R.make_cache(qa, params, cfg, {}, batch_size=B, max_len=max_len)
+    max_len = cache_len if cache_len is not None else S0 + max_new_tokens
+    assert max_len >= S0 + max_new_tokens or cfg.sub_quadratic, \
+        (max_len, S0 + max_new_tokens)
+    # same value dtype as the engine's CachePool — the parity contract
+    # includes the KV storage rounding, not just the arithmetic
+    cache = R.make_cache(qa, params, cfg, {}, batch_size=B, max_len=max_len,
+                         dtype=cache_dtype(policy))
 
+    # params travel as a jit *argument*, exactly as the engine's serve step
+    # passes them: closed-over params become XLA constants, which fold into
+    # bitwise-different (still valid) logits and break engine parity on
+    # near-tie argmaxes.
     @jax.jit
-    def step(cache, token, pos):
+    def step(params, cache, token, pos):
         logits, cache = R.decode(qa, params, cfg, token, cache, pos)
         return logits, cache
 
@@ -35,7 +57,7 @@ def generate(params, cfg, policy: PrecisionPolicy, prompts: jax.Array, *,
     out = [prompts]
     logits = None
     for t in range(S0):
-        logits, cache = step(cache, prompts[:, t:t + 1], jnp.int32(t))
+        logits, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
     tok = None
     for t in range(max_new_tokens):
         if temperature > 0:
@@ -46,5 +68,5 @@ def generate(params, cfg, policy: PrecisionPolicy, prompts: jax.Array, *,
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out.append(tok)
         if t < max_new_tokens - 1:
-            logits, cache = step(cache, tok, jnp.int32(S0 + t))
+            logits, cache = step(params, cache, tok, jnp.int32(S0 + t))
     return jnp.concatenate(out, axis=1)

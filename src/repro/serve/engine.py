@@ -1,0 +1,235 @@
+"""Continuous-batching decode engine over a slotted KV-cache pool.
+
+Scheduling model (the vLLM/Orca iteration-level loop, reduced to its
+core): the engine owns ``n_slots`` decode lanes backed by one
+:class:`repro.serve.cache.CachePool` allocation. Every :meth:`Engine.step`
+is one iteration of
+
+1. **admit** — pending requests are popped into free slots; the freshly
+   acquired slot ids form the step's ``reset`` mask, so slot
+   re-initialization happens *inside* the compiled step (no separate
+   reset executable, no host round-trip over the cache);
+2. **assemble** — per slot: prefilling lanes feed the next prompt token
+   (teacher forcing), decoding lanes feed their previously sampled
+   token, parked lanes are masked out via ``active``;
+3. **decode** — one call of the single compiled
+   :func:`repro.train.step.make_serve_step` executable advances every
+   active lane one position (prefill and decode share the slot layout,
+   so per (mesh, policy) there is exactly one compiled program);
+4. **evict** — lanes whose model output completed a sequence (EOS or
+   ``max_new_tokens``) release their slot, which the next iteration's
+   admission refills mid-flight.
+
+A request of prompt length ``S0`` therefore occupies its slot for
+``S0 + n_generated`` steps; the first sampled token is the model output
+of the step that consumed the last prompt token. Under nearest rounding
+this path is token-for-token identical to lock-step
+:func:`repro.serve.decode.generate` (the engine parity tests assert
+exact equality).
+
+Sampling is greedy (argmax inside the executable) — temperature sampling
+would only need the step to return logits, at (N, vocab) extra bytes per
+iteration; the hook is noted in docs/serving.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.dist.axes import activation_sharding
+from repro.dist.partition import dp_axes, dp_size, serve_input_specs
+from repro.serve.cache import CachePool
+from repro.train.step import make_serve_step
+
+__all__ = ["Request", "Completion", "EngineStats", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. ``prompt`` is a 1-D i32 token array."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """A finished request: generated tokens + accounting."""
+    rid: int
+    prompt: np.ndarray
+    tokens: np.ndarray            # generated continuation (EOS included)
+    finish_reason: str            # "eos" | "length"
+    slot: int
+    admitted_step: int
+    finished_step: int
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Iteration-level counters (see docs/serving.md for the math)."""
+    steps: int = 0                # engine iterations = compiled-step calls
+    slot_steps: int = 0           # steps × n_slots (lane capacity spent)
+    active_slot_steps: int = 0    # lanes that actually computed a token
+    prefill_slot_steps: int = 0   # … of which were prompt (teacher-forced)
+    tokens_generated: int = 0     # sampled continuation tokens kept
+    admitted: int = 0
+    finished: int = 0
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of lane capacity doing useful work (active / total)."""
+        return self.active_slot_steps / max(self.slot_steps, 1)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    admitted_step: int
+    fed: int = 0                  # tokens consumed so far (= next position)
+    last_token: int = 0           # model output of the previous step
+    generated: list = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """Continuous-batching engine bound to (params, cfg, policy[, mesh]).
+
+    ``n_slots`` bounds concurrency, ``max_len`` bounds per-request
+    ``len(prompt) + max_new_tokens``. With a ``mesh`` the cache pool is
+    sharded via ``cache_specs`` and the step inputs via
+    ``serve_input_specs``; the compiled step then runs under the mesh +
+    activation-sharding context exactly as the dry-run compiles it.
+    """
+
+    def __init__(self, params, cfg, policy: PrecisionPolicy, *,
+                 n_slots: int = 8, max_len: int = 128, mesh=None,
+                 eos_id: Optional[int] = None):
+        if cfg.encdec:
+            raise ValueError("Engine is decoder-only; encoder-decoder "
+                             "models serve via repro.serve.decode.generate")
+        self.cfg = cfg
+        self.policy = policy
+        self.params = params
+        self.mesh = mesh
+        self.eos_id = eos_id
+        self.pool = CachePool(params, cfg, policy, n_slots=n_slots,
+                              max_len=max_len, mesh=mesh)
+        self._step_fn = jax.jit(make_serve_step(cfg, policy),
+                                donate_argnums=(1,))
+        self._in_shardings = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            self._in_shardings = {
+                k: NamedSharding(mesh, s)
+                for k, s in serve_input_specs(n_slots, mesh).items()}
+            self._dp = dp_axes(mesh)
+            self._mp = (mesh.shape["model"]
+                        if "model" in mesh.axis_names else 1)
+        self._slots: list[Optional[_Slot]] = [None] * n_slots
+        self._pending: deque[Request] = deque()
+        self._next_rid = 0
+        self.stats = EngineStats()
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *,
+               rid: Optional[int] = None) -> int:
+        """Queue a request; returns its rid. Admission happens in step()."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.size + max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds the pool max_len ({self.pool.max_len})")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self._pending.append(Request(rid, prompt, int(max_new_tokens)))
+        return rid
+
+    def has_work(self) -> bool:
+        return bool(self._pending) or any(s is not None for s in self._slots)
+
+    # -- the iteration ------------------------------------------------------
+    def step(self) -> list[Completion]:
+        """One continuous-batching iteration; returns requests finished."""
+        n = self.pool.n_slots
+        reset = np.zeros((n,), bool)
+        # 1. admit into free slots
+        while self._pending and self.pool.n_free:
+            slot = self.pool.acquire()
+            req = self._pending.popleft()
+            self._slots[slot] = _Slot(req.rid, req.prompt,
+                                      req.max_new_tokens, self.stats.steps)
+            reset[slot] = True
+            self.stats.admitted += 1
+        # 2. assemble slot-indexed inputs
+        token = np.zeros((n, 1), np.int32)
+        pos = np.zeros((n,), np.int32)
+        active = np.zeros((n,), bool)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            active[i] = True
+            pos[i] = s.fed
+            token[i, 0] = (s.prompt[s.fed] if s.fed < s.prompt.size
+                           else s.last_token)
+        # 3. one compiled step for every lane
+        args = {"token": token, "pos": pos, "active": active, "reset": reset}
+        with contextlib.ExitStack() as ctx:
+            if self.mesh is not None:
+                args = {k: jax.device_put(v, self._in_shardings[k])
+                        for k, v in args.items()}
+                ctx.enter_context(self.mesh)
+                ctx.enter_context(activation_sharding(
+                    self._dp, dp_size(self.mesh), "model", self._mp))
+            out, self.pool.cache = self._step_fn(
+                self.params, self.pool.cache, args["token"], args["pos"],
+                args["active"], args["reset"])
+        sampled = np.asarray(out).reshape(n)
+        # 4. account + evict
+        self.stats.steps += 1
+        self.stats.slot_steps += n
+        done: list[Completion] = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            self.stats.active_slot_steps += 1
+            in_prefill = s.fed < s.prompt.size - 1
+            s.fed += 1
+            if in_prefill:
+                self.stats.prefill_slot_steps += 1
+                continue                      # prompt not exhausted yet
+            tok = int(sampled[i])
+            s.generated.append(tok)
+            s.last_token = tok
+            self.stats.tokens_generated += 1
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(s.generated) >= s.max_new_tokens:
+                done.append(Completion(
+                    s.rid, s.prompt, np.asarray(s.generated, np.int32),
+                    "eos" if hit_eos else "length", i,
+                    s.admitted_step, self.stats.steps))
+                self._slots[i] = None
+                self.pool.release(i)
+                self.stats.finished += 1
+        return done
+
+    def run(self, max_steps: Optional[int] = None) -> list[Completion]:
+        """Step until drained (or ``max_steps``); completions in finish order."""
+        out: list[Completion] = []
+        while self.has_work():
+            if max_steps is not None and self.stats.steps >= max_steps:
+                break
+            out.extend(self.step())
+        return out

@@ -147,18 +147,54 @@ def make_eval_step(cfg, policy: PrecisionPolicy, *, attn_chunk: int = 1024):
 
 
 def make_serve_step(cfg, policy: PrecisionPolicy):
-    """(params, cache, token, pos) → (next_token, logits, new_cache).
+    """Slot-indexed decode step:
+    ``(params, cache, token, pos[, active, reset]) → (next_token, new_cache)``.
 
-    Greedy decode of exactly one token against the KV/state cache — the
-    function lowered for the ``decode_*`` / ``long_500k`` dry-run cells.
+    Greedy decode of exactly one token per slot against the KV/state
+    cache. Two position layouts share the implementation:
+
+    * ``pos`` scalar — lock-step decode, every lane at the same depth
+      (``repro.serve.decode.generate`` and the encoder–decoder dry-run
+      cells, whose decoder position drives a scalar sinusoidal
+      embedding);
+    * ``pos (N,)`` — per-slot depths, the continuous-batching layout
+      (:class:`repro.serve.engine.Engine`) and what the decoder-only
+      ``decode_*`` / ``long_500k`` dry-run cells lower: each lane
+      writes its KV cell at its own position.
+
+    The two ``(N,)`` bool lane masks make admission and eviction part of
+    the same executable — there is exactly **one** compiled program per
+    (mesh, policy), shared by prefill and decode:
+
+    * ``reset`` — slots re-initialized *before* the step (position maps
+      to −1, recurrent state to 0; stale KV values merely become
+      unreachable — see :func:`repro.serve.cache.reset_slots`): how the
+      engine admits a request into a recycled slot;
+    * ``active`` — lanes actually decoding. Parked lanes run with
+      ``pos = −1``, which routes their KV scatter out of range (write
+      dropped, pool untouched); their recurrent state is carried
+      through by :func:`repro.serve.cache.keep_active` and they report
+      token −1.
     """
+    # deferred: repro.serve.engine imports this module (serve sits above
+    # train in the layering), so the helper import can't run at load time
+    from repro.serve import cache as SC
+
     qa = QArith(policy)
 
-    def serve_step(params, cache, token, pos, mrope_positions=None):
+    def serve_step(params, cache, token, pos, active=None, reset=None,
+                   mrope_positions=None):
         wc = compute_params(params, policy)
+        if reset is not None:
+            cache = SC.reset_slots(cache, reset)
+        if active is not None:
+            pos = jnp.where(active, pos, -1)   # parked ⇒ KV write dropped
         logits, new_cache = R.decode(qa, wc, cfg, token, cache, pos,
                                      mrope_positions=mrope_positions)
         next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        if active is not None:
+            new_cache = SC.keep_active(active, new_cache, cache)
+            next_token = jnp.where(active, next_token, -1)
         return next_token[:, None], new_cache
 
     return serve_step

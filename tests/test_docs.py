@@ -1,0 +1,20 @@
+"""Docs hygiene: the CI link check must also fail locally (tier-1)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_links
+
+
+def test_docs_exist_and_linked_from_readme():
+    readme = (ROOT / "README.md").read_text()
+    for page in ("docs/architecture.md", "docs/precision-policies.md",
+                 "docs/serving.md"):
+        assert (ROOT / page).exists(), page
+        assert page in readme, f"README does not link {page}"
+
+
+def test_no_dead_relative_links():
+    assert check_links.dead_links(ROOT) == []

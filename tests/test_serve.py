@@ -1,0 +1,253 @@
+"""Continuous-batching engine: slot primitives, parity, reuse, sharding.
+
+The parity contract: under nearest rounding, N staggered requests pushed
+through the engine produce token-for-token the same continuations as
+lock-step :func:`repro.serve.decode.generate` run per request group with
+the cache pinned to the pool length (equal cache shapes ⇒ identical
+reduction order ⇒ bitwise-equal logits ⇒ identical argmax).
+
+The 4×2-mesh case decodes with the KV pool sharded over (data, model)
+and runs only under ``-m dist`` (8 in-process virtual devices).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import get_policy
+from repro.dist import partition as PT
+from repro.models import registry as R
+from repro.serve import CachePool, Engine, generate
+from repro.serve.cache import cache_dtype, keep_active, reset_slots, slot_count
+
+NEAREST = get_policy("bf16_standard")
+
+
+def _cfg(arch="qwen2.5-3b"):
+    return R.get_config(arch).reduced()
+
+
+def _prompts(rng, sizes, vocab):
+    return [rng.integers(0, vocab, size=s).astype(np.int32) for s in sizes]
+
+
+def _parity(engine_done, params, cfg, policy, cache_len):
+    """Assert every completion matches lock-step generate token-for-token.
+
+    References are batched per (prompt_len, gen_len) group — one compile
+    per shape instead of per request; lanes are numerically independent,
+    so the grouping changes nothing."""
+    groups = {}
+    for c in engine_done:
+        groups.setdefault((c.prompt.size, c.tokens.size), []).append(c)
+    for (s0, gen), cs in groups.items():
+        batch = jnp.asarray(np.stack([c.prompt for c in cs]))
+        ref = np.asarray(generate(params, cfg, policy, batch,
+                                  max_new_tokens=gen, cache_len=cache_len))
+        for i, c in enumerate(cs):
+            assert np.array_equal(ref[i, s0:], c.tokens), \
+                f"rid {c.rid}: engine {c.tokens} != reference {ref[i, s0:]}"
+
+
+# ---------------------------------------------------------------------------
+# Slot primitives (no model, no compile)
+# ---------------------------------------------------------------------------
+
+class TestSlotPrimitives:
+    CACHE = {
+        "layers": {"b0": (jnp.ones((3, 4, 2, 5, 2), jnp.bfloat16),      # k
+                          jnp.ones((3, 4, 2, 5, 2), jnp.bfloat16),      # v
+                          jnp.zeros((3, 4, 2), jnp.int32))},            # pos
+        "rem": {"b0": {"conv": jnp.ones((4, 3, 6), jnp.bfloat16),
+                       "h": jnp.ones((4, 6), jnp.float32)}},
+    }
+
+    def test_reset_slots_kills_position_map_not_kv_values(self):
+        reset = jnp.asarray([True, False, False, True])
+        out = reset_slots(self.CACHE, reset)
+        k, _, pos = out["layers"]["b0"]
+        # stacked root → slot axis is dim 1; position map −1 makes every
+        # stale KV cell unreachable, so the values themselves stay put
+        assert int(pos[:, 0].max()) == -1 and int(pos[:, 1].max()) == 0
+        assert float(k[:, 0].min()) == 1          # KV pool not streamed
+        # unstacked root → slot axis is dim 0; recurrent state is zeroed
+        h = out["rem"]["b0"]["h"]
+        assert float(jnp.abs(h[0]).max()) == 0 and float(h[1].min()) == 1
+        assert float(jnp.abs(out["rem"]["b0"]["conv"][0]).max()) == 0
+
+    def test_keep_active_carries_parked_recurrent_state(self):
+        new = jax.tree_util.tree_map(lambda x: x + 1, self.CACHE)
+        active = jnp.asarray([True, False, True, False])
+        out = keep_active(active, new, self.CACHE)
+        conv = out["rem"]["b0"]["conv"]
+        assert float(conv[0].min()) == 2 and float(conv[1].max()) == 1
+        # attention tuples pass through: parked lanes never write them
+        # (pos = −1 routes the scatter out of range at the write site)
+        k = out["layers"]["b0"][0]
+        assert float(k.min()) == 2
+
+    def test_slot_count_reads_stacked_axis(self):
+        assert slot_count(self.CACHE) == 4
+
+    def test_serve_input_specs_slot_axis(self):
+        class M:
+            axis_names = ("data", "model")
+            shape = {"data": 4, "model": 2}
+        specs = PT.serve_input_specs(8, M())
+        assert specs["token"] == P(("data",), None)
+        assert specs["pos"] == P(("data",))
+        # non-divisible slot count replicates, matching cache_specs
+        assert PT.serve_input_specs(6, M())["pos"] == P(None)
+
+
+# ---------------------------------------------------------------------------
+# Cache pool bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestCachePool:
+    def test_acquire_release_fifo(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        pool = CachePool(params, cfg, NEAREST, n_slots=3, max_len=16)
+        assert [pool.acquire() for _ in range(3)] == [0, 1, 2]
+        assert pool.acquire() is None and pool.n_free == 0
+        pool.release(1)
+        with pytest.raises(ValueError):
+            pool.release(1)
+        assert pool.acquire() == 1
+        assert slot_count(pool.cache) == 3
+
+    def test_value_dtype_follows_policy(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+        assert cache_dtype(get_policy("bf16_sr")) == jnp.bfloat16
+        assert cache_dtype(get_policy("fp32")) == jnp.float32
+        pool = CachePool(params, cfg, get_policy("bf16_sr"),
+                         n_slots=2, max_len=8)
+        k = pool.cache["layers"]["b0"][0]
+        assert k.dtype == jnp.bfloat16
+        assert pool.cache["layers"]["b0"][2].dtype == jnp.int32
+
+    def test_submit_validation(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=16)
+        with pytest.raises(ValueError):
+            eng.submit(np.arange(10, dtype=np.int32), 10)  # 20 > max_len
+        with pytest.raises(ValueError):
+            eng.submit(np.asarray([], np.int32), 4)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching parity + slot reuse
+# ---------------------------------------------------------------------------
+
+class TestEngineParity:
+    def test_staggered_requests_match_generate(self):
+        """8 staggered requests over 3 slots ≡ lock-step generate."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(0)
+        eng = Engine(params, cfg, NEAREST, n_slots=3, max_len=24)
+        sizes = (5, 7, 5, 7, 5, 7, 5, 7)
+        gens = (8, 6, 8, 6, 8, 6, 8, 6)
+        for p, g in zip(_prompts(rng, sizes, cfg.vocab), gens):
+            eng.submit(p, g)
+        done = eng.run()
+        assert len(done) == 8 and not eng.has_work()
+        # 8 admissions onto 3 slots ⇒ eviction + mid-flight refill happened
+        assert eng.stats.admitted == 8
+        assert {c.slot for c in done} == {0, 1, 2}
+        _parity(done, params, cfg, NEAREST, cache_len=24)
+        # token accounting adds up
+        assert eng.stats.tokens_generated == sum(gens)
+        assert eng.stats.slot_steps == eng.stats.steps * 3
+        assert 0 < eng.stats.utilization <= 1
+
+    def test_eviction_refill_reuses_slots(self):
+        """More waves than slots: every slot is recycled and state never
+        leaks across the requests that share it."""
+        cfg = _cfg("recurrentgemma-2b")  # RG-LRU state + local-attn ring
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(1)
+        eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=16)
+        sizes, gens = (4, 6, 4, 6, 4), (5, 4, 6, 4, 5)
+        for p, g in zip(_prompts(rng, sizes, cfg.vocab), gens):
+            eng.submit(p, g)
+        done = eng.run()
+        assert len(done) == 5 and eng.pool.n_free == 2
+        per_slot = {0: 0, 1: 0}
+        for c in done:
+            per_slot[c.slot] += 1
+        assert min(per_slot.values()) >= 2          # both slots recycled
+        _parity(done, params, cfg, NEAREST, cache_len=16)
+
+    def test_parity_holds_for_f32_cache_policy(self):
+        """Non-bf16 value dtype: generate must build its cache in
+        cache_dtype(policy) or KV storage rounding breaks parity."""
+        policy = get_policy("fp32")
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), policy.param_dtype)
+        rng = np.random.default_rng(3)
+        eng = Engine(params, cfg, policy, n_slots=2, max_len=24)
+        assert eng.pool.dtype == jnp.float32
+        for p in _prompts(rng, (5, 5, 5), cfg.vocab):
+            eng.submit(p, 16)
+        done = eng.run()
+        assert len(done) == 3
+        _parity(done, params, cfg, policy, cache_len=24)
+
+    def test_eos_evicts_early(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        prompt = np.arange(1, 6, dtype=np.int32)
+        free = Engine(params, cfg, NEAREST, n_slots=1, max_len=32)
+        free.submit(prompt, 12)
+        full = free.run()[0]
+        assert full.finish_reason == "length" and full.tokens.size == 12
+        eos = int(full.tokens[3])                   # force a mid-stream stop
+        cut = int(np.argmax(full.tokens == eos))    # its first occurrence
+        eng = Engine(params, cfg, NEAREST, n_slots=1, max_len=32,
+                     eos_id=eos)
+        eng.submit(prompt, 12)
+        c = eng.run()[0]
+        assert c.finish_reason == "eos"
+        assert c.tokens.tolist() == full.tokens[:cut + 1].tolist()
+        assert int(c.tokens[-1]) == eos
+
+
+# ---------------------------------------------------------------------------
+# Sharded decode (8 virtual devices, -m dist)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.dist
+class TestShardedEngine:
+    def test_mesh_4x2_sharded_cache_parity(self, eight_virtual_devices):
+        """Engine on a 4 data × 2 model mesh: KV pool sharded on both
+        axes, tokens identical to the single-device engine."""
+        from jax.sharding import NamedSharding
+
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(2)
+        sizes = (5, 7, 5, 7, 5, 7, 5, 7, 5, 7)
+        gens = (6, 8, 6, 8, 6, 8, 6, 8, 6, 8)
+        prompts = _prompts(rng, sizes, cfg.vocab)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        pspecs = PT.param_specs(params, cfg, mesh)
+        params8 = jax.device_put(params, jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval")))
+        eng = Engine(params8, cfg, NEAREST, n_slots=8, max_len=24, mesh=mesh)
+        # the slot axis of every KV leaf is sharded over the data axis
+        k = eng.pool.cache["layers"]["b0"][0]
+        assert k.sharding.spec[1] == ("data",)      # dim 1: stacked layers
+        assert "model" in jax.tree_util.tree_flatten(
+            tuple(k.sharding.spec))[0]              # head dim on model
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        done = eng.run()
+        assert len(done) == 10
+        _parity(done, params, cfg, NEAREST, cache_len=24)

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Fail on dead relative links in README.md and docs/*.md.
+
+Checks every markdown link/image whose target is *relative* (external
+http(s)/mailto links are skipped): the target path — resolved against
+the file containing the link, minus any #fragment — must exist in the
+repo. Used as a CI step (see .github/workflows/ci.yml) and by
+tests/test_docs.py, so link rot fails both locally and in CI.
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and ![alt](target); target up to the first ')' or space
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def dead_links(root: Path) -> list[str]:
+    bad = []
+    for md in doc_files(root):
+        for m in _LINK.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(_SKIP):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                bad.append(f"{md.relative_to(root)}: dead link -> {target}")
+    return bad
+
+
+def main() -> int:
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    bad = dead_links(root)
+    checked = len(doc_files(root))
+    if bad:
+        print("\n".join(bad), file=sys.stderr)
+        print(f"[check_links] {len(bad)} dead link(s) across {checked} "
+              f"file(s)", file=sys.stderr)
+        return 1
+    print(f"[check_links] OK: {checked} markdown file(s), no dead relative "
+          f"links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
