@@ -22,6 +22,7 @@ SECTIONS = [
     ("roofline", "benchmarks.bench_roofline"),
     ("fsdp_memory", "benchmarks.bench_fsdp"),
     ("serve_batching", "benchmarks.bench_serve"),
+    ("grad_wire", "benchmarks.bench_grad_wire"),
 ]
 
 

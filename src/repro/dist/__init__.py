@@ -19,6 +19,12 @@ Three modules, all mesh-shape-agnostic (they read axis *names*, not sizes):
   gradients, TrainState sharding trees for launch + elastic resume, and
   per-device byte accounting.
 
+A fourth module, :mod:`repro.dist.transport`, sits on top of the other
+three: the pluggable :class:`GradientTransport` strategies (fp32 psum /
+reduce-scatter / SR-compressed bf16 wire with error feedback) that the
+train step delegates every gradient collective to, selected per mesh
+axis (``make_transport``).
+
 Convention (see ROADMAP): the ``model`` mesh axis carries tensor/expert
 parallelism; every other axis (``data``, ``fsdp``, ``pod``) carries data
 parallelism — with parameters and optimizer state additionally sharded
@@ -34,8 +40,13 @@ from repro.dist.partition import (Placement, batch_specs, cache_specs,
                                   default_placement, dp_axes, dp_size,
                                   param_specs, serve_input_specs,
                                   state_shardings)
+from repro.dist.transport import (CompressedWire, Fp32Psum,
+                                  GradientTransport, ReduceScatter,
+                                  make_transport)
 
 __all__ = [
+    "GradientTransport", "Fp32Psum", "ReduceScatter", "CompressedWire",
+    "make_transport",
     "ActivationSharding", "activation_sharding", "current_sharding",
     "padded_head_count", "shard_batch", "shard_heads",
     "Placement", "default_placement",

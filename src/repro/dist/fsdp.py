@@ -114,22 +114,36 @@ def reduce_scatter_grads(grads: PyTree, pspecs: PyTree,
 
 
 def train_state_shardings(state, cfg, mesh,
-                          placement: Placement | None = None):
+                          placement: Placement | None = None,
+                          transport=None):
     """NamedSharding tree matching a :class:`TrainState`.
 
     ``step`` replicates, ``params`` follow :func:`PT.param_specs` under
     ``placement``, and the optimizer state — moments, Kahan compensation,
     SR residuals, bias-correction scalars — follows
     :func:`PT.state_shardings`, i.e. co-shards leaf-for-leaf with its
-    parameters. The result serves three callers: the initial
-    ``device_put`` in the launcher, the jit ``out_shardings`` if wanted,
-    and the elastic checkpoint-resume path
+    parameters. When the state carries gradient-transport error-feedback
+    residuals (``wire_residuals``), their specs come from
+    ``transport.residual_specs`` — the parameter specs with the leading
+    wire-replica dim on the transport's wire axis, so each wire replica
+    owns its buffer and the trailing dims co-shard with the parameter.
+    (Without a ``transport`` the leading dim replicates — only correct
+    for single-replica wires.) The result serves three callers: the
+    initial ``device_put`` in the launcher, the jit ``out_shardings`` if
+    wanted, and the elastic checkpoint-resume path
     (``run_training(state_shardings=...)``), which re-shards restored
     state onto the *current* mesh instead of restoring it unsharded.
     """
     pspecs = PT.param_specs(state.params, cfg, mesh, placement)
     ospecs = PT.state_shardings(pspecs, state.opt_state, mesh)
-    spec_tree = type(state)(P(), pspecs, ospecs)
+    rspecs = None
+    if getattr(state, "wire_residuals", None) is not None:
+        if transport is not None:
+            rspecs = transport.residual_specs(pspecs)
+        else:
+            rspecs = jax.tree_util.tree_map(
+                lambda s: P(None, *s), pspecs, is_leaf=_is_spec)
+    spec_tree = type(state)(P(), pspecs, ospecs, rspecs)
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=_is_spec)
 

@@ -25,6 +25,7 @@ from repro.configs.base import LM_SHAPES, shape_by_name
 from repro.core.policy import get_policy
 from repro.core.qarith import QArith
 from repro.dist import partition as PT
+from repro.dist import transport as TR
 from repro.dist.axes import activation_sharding
 from repro.launch import analysis as A
 from repro.launch import hlo_analysis as HA
@@ -57,7 +58,16 @@ def runnable(arch: str, shape_name: str) -> tuple[bool, str]:
 def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr",
                save_hlo: Path | None = None, moe_strategy: str | None = None,
                attn_chunk: int = 1024,
-               placement: PT.Placement | None = None) -> dict:
+               placement: PT.Placement | None = None,
+               grad_wire: str | None = None, grad_accum: int = 1) -> dict:
+    """Lower + compile one (arch × shape × mesh) cell.
+
+    ``grad_wire`` (None keeps the historic implicit-psum lowering)
+    selects an explicit gradient transport for train cells — on a
+    multi-pod mesh ``"compressed"`` lowers the SR-bf16 pod wire with its
+    error-feedback residuals in the TrainState; ``grad_accum`` lowers
+    the k-microbatch accumulation scan.
+    """
     import dataclasses as _dc
     cfg = R.get_config(arch)
     if moe_strategy:
@@ -81,18 +91,36 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
         opt = adamw(policy, b2=0.997, weight_decay=0.01)
         opt_shape = jax.eval_shape(opt.init, params_shape)
         ospecs = PT.state_shardings(pspecs, opt_shape, mesh)
+        transport = None
+        res_in = None
+        hint_dp, hint_dp_size = dp, dp_size
+        if grad_wire is not None:
+            transport = TR.make_transport(mesh=mesh, placement=placement,
+                                          pspecs=pspecs, wire=grad_wire)
+            res_shape = jax.eval_shape(transport.init_residuals, params_shape)
+            if res_shape is not None:
+                res_in = _sds(res_shape, transport.residual_specs(pspecs),
+                              mesh)
+            hint_dp, hint_dp_size = transport.hint_axes(mesh)
         state_in = TrainState(
             jax.ShapeDtypeStruct((), jnp.int32),
-            params_in, _sds(opt_shape, ospecs, mesh))
+            params_in, _sds(opt_shape, ospecs, mesh), res_in)
         batch_shape = input_specs(cfg, shape, compute_dtype=policy.compute_dtype)
         bspecs = PT.batch_specs(batch_shape, mesh)
         batch_in = _sds(batch_shape, bspecs, mesh)
-        if placement is not None and placement.fsdp_axis is not None:
+        if transport is not None:
+            step_fn = make_train_step(cfg, policy, opt, constant(1e-4),
+                                      transport=transport,
+                                      grad_accum=grad_accum)
+        elif placement is not None and placement.fsdp_axis is not None:
             step_fn = make_fsdp_train_step(cfg, policy, opt, constant(1e-4),
-                                           pspecs=pspecs, placement=placement)
+                                           pspecs=pspecs, placement=placement,
+                                           grad_accum=grad_accum)
         else:
-            step_fn = make_train_step(cfg, policy, opt, constant(1e-4))
-        with mesh, activation_sharding(dp, dp_size, "model", mesh.shape["model"]):
+            step_fn = make_train_step(cfg, policy, opt, constant(1e-4),
+                                      grad_accum=grad_accum)
+        with mesh, activation_sharding(hint_dp, hint_dp_size, "model",
+                                       mesh.shape["model"]):
             lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
                 state_in, batch_in, jax.ShapeDtypeStruct((), jnp.int32))
     elif shape.kind == "prefill":
@@ -184,7 +212,9 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
         "collective_bytes_per_device": coll_bytes,
         "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes},
         "n_whiles": hc.n_whiles, "unknown_trip_whiles": hc.unknown_trip_whiles,
-        "collectives": colls, "memory_analysis": mem,
+        "collectives": colls,
+        "collective_bytes_by_dtype": hc.collective_bytes_by_dtype,
+        "memory_analysis": mem,
         "roofline": terms,
         "model_flops_global": mf,
         "model_flops_per_device": mf / chips,
@@ -207,6 +237,14 @@ def main():
     ap.add_argument("--fsdp", action="store_true",
                     help="FSDP placement: shard params + optimizer state "
                          "over the mesh's data axis")
+    ap.add_argument("--grad-wire", default=None,
+                    choices=[None, "fp32", "compressed"],
+                    help="explicit gradient transport for train cells "
+                         "(compressed = SR-bf16 pod wire with error-"
+                         "feedback residuals); default keeps the "
+                         "implicit-psum lowering")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatch accumulation factor for train cells")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
 
@@ -242,7 +280,8 @@ def main():
                                              fsdp=args.fsdp)
             rec = lower_cell(arch, shape_name, meshes[mesh_kind],
                              policy_name=args.policy, moe_strategy=args.moe,
-                             placement=placement,
+                             placement=placement, grad_wire=args.grad_wire,
+                             grad_accum=args.grad_accum,
                              save_hlo=(out / f"{tag}.hlo") if args.save_hlo else None)
             path.write_text(json.dumps(rec, indent=1))
             r = rec["roofline"]

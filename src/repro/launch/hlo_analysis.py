@@ -83,6 +83,15 @@ class HloCost:
     n_whiles: int = 0
     bytes_by_kind: dict = field(default_factory=dict)
     flops_by_meta: dict = field(default_factory=dict)
+    #: operand bytes per (collective kind, operand dtype) — e.g.
+    #: ``{"all-reduce": {"f32": ..., "bf16": ...}}``. Reported in the
+    #: dry-run JSON artifacts to audit what each collective moves per
+    #: wire format. Caveat: this reads the *post-optimization* HLO, so
+    #: on backends that promote 16-bit all-reduce to f32 (the CPU test
+    #: backend does) a bf16 wire shows up under "f32" here — which is
+    #: why ``benchmarks/bench_grad_wire.py`` measures its wire bytes
+    #: from the pre-partitioning StableHLO instead.
+    collective_bytes_by_dtype: dict = field(default_factory=dict)
 
     @property
     def collective_bytes(self) -> float:
@@ -90,9 +99,10 @@ class HloCost:
 
 
 def _parse(text: str) -> tuple[dict, dict, dict]:
-    """→ (computations by name, op defs by name (bytes,dims), raw op lines)."""
+    """→ (computations by name, op defs by name (bytes,dims), dtypes by name)."""
     comps: dict[str, _Comp] = {}
     sizes: dict[str, tuple[int, list]] = {}
+    dtypes: dict[str, str] = {}
     current = None
     for line in text.splitlines():
         mh = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
@@ -106,8 +116,10 @@ def _parse(text: str) -> tuple[dict, dict, dict]:
             b, shapes = _type_info(type_str)
             dims = shapes[0][1] if shapes else []
             sizes[name] = (b, dims)
+            if shapes:
+                dtypes[name] = shapes[0][0]
             current.ops.append(_Op(name, kind, b, dims, line))
-    return comps, sizes, {}
+    return comps, sizes, dtypes
 
 
 def _operands(line: str) -> list[str]:
@@ -217,7 +229,7 @@ def _trip_count(cond_name: str, comps: dict) -> int | None:
 
 
 def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
-    comps, sizes, _ = _parse(text)
+    comps, sizes, dtypes = _parse(text)
     if entry is None:
         m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
         entry = m.group(1) if m else next(iter(comps))
@@ -236,7 +248,8 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
             return 0.0, 0.0, {}, {}
         fl, by = 0.0, 0.0
         kinds: dict[str, float] = {}
-        coll: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+        coll: dict[str, dict] = defaultdict(
+            lambda: {"count": 0, "bytes": 0.0, "by_dtype": {}})
         for op in comp.ops:
             kind = op.kind
             base = kind[:-6] if kind.endswith("-start") else kind
@@ -258,6 +271,7 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
                     for k, d in c2.items():
                         coll[k]["count"] += trips * d["count"]
                         coll[k]["bytes"] += trips * d["bytes"]
+                        _acc_kinds(coll[k]["by_dtype"], d["by_dtype"], trips)
                 continue
             if kind in ("call", "conditional"):
                 for cal in _CALLS_RE.findall(op.line):
@@ -268,9 +282,23 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
                     for k, d in c2.items():
                         coll[k]["count"] += d["count"]
                         coll[k]["bytes"] += d["bytes"]
+                        _acc_kinds(coll[k]["by_dtype"], d["by_dtype"])
                 continue
             if base in COLLECTIVES:
-                ob = sum(sizes.get(o, (0, []))[0] for o in _operands(op.line))
+                ob = 0
+                for o in _operands(op.line):
+                    b, _ = sizes.get(o, (0, []))
+                    ob += b
+                    dt = dtypes.get(o)
+                    if b and dt:
+                        coll[base]["by_dtype"][dt] = \
+                            coll[base]["by_dtype"].get(dt, 0.0) + float(b)
+                if not ob and op.out_bytes:
+                    dt = dtypes.get(op.name)
+                    if dt:
+                        coll[base]["by_dtype"][dt] = \
+                            coll[base]["by_dtype"].get(dt, 0.0) \
+                            + float(op.out_bytes)
                 coll[base]["count"] += 1
                 coll[base]["bytes"] += ob or op.out_bytes
                 by += float(ob or op.out_bytes)
@@ -290,5 +318,7 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
     cost.flops = fl
     cost.bytes = by
     cost.collectives = coll
+    cost.collective_bytes_by_dtype = {
+        k: dict(d["by_dtype"]) for k, d in coll.items()}
     cost.bytes_by_kind = dict(sorted(kinds.items(), key=lambda kv: -kv[1]))
     return cost

@@ -47,15 +47,24 @@ def make_production_mesh(*, multi_pod: bool = False, fsdp: int = 1):
     return _validated_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1, fsdp: int = 1):
+def make_local_mesh(data: int = 1, model: int = 1, fsdp: int = 1,
+                    pods: int = 1):
     """Small mesh over whatever devices exist (tests / CPU).
 
     ``fsdp > 1`` adds a dedicated ``fsdp`` axis between ``data`` and
     ``model`` (e.g. ``make_local_mesh(2, 2, fsdp=2)`` is the 8-device
-    2 data × 2 fsdp × 2 model test topology); otherwise the historic
-    two-axis layout is kept so existing callers see the same mesh.
+    2 data × 2 fsdp × 2 model test topology); ``pods > 1`` prepends a
+    ``pod`` axis — the virtual stand-in for DCN-connected ICI domains,
+    the axis the gradient-wire strategies (``--grad-wire``) reduce over.
+    Otherwise the historic two-axis layout is kept so existing callers
+    see the same mesh.
     """
+    shape: tuple = (data, model)
+    axes: tuple = (PT.DATA_AXIS, PT.MODEL_AXIS)
     if fsdp > 1:
-        return _validated_mesh((data, fsdp, model),
-                               (PT.DATA_AXIS, PT.FSDP_AXIS, PT.MODEL_AXIS))
-    return _validated_mesh((data, model), (PT.DATA_AXIS, PT.MODEL_AXIS))
+        shape = (data, fsdp, model)
+        axes = (PT.DATA_AXIS, PT.FSDP_AXIS, PT.MODEL_AXIS)
+    if pods > 1:
+        shape = (pods,) + shape
+        axes = (PT.POD_AXIS,) + axes
+    return _validated_mesh(shape, axes)

@@ -11,10 +11,16 @@ activation-sharding context are installed exactly as in the dry-run.
 ``--fsdp`` shards parameters *and* all optimizer state (moments, Kahan
 compensation, SR residuals) over the data axes — a dedicated ``fsdp``
 axis when ``--fsdp-parallel > 1`` gives one, otherwise the ``data`` axis
-itself — and switches to the gather/scatter step builder. The TrainState
-sharding tree is also handed to ``run_training`` so an elastic
-checkpoint resume re-shards restored state (Kahan buffers included) onto
-the *current* mesh instead of restoring it unsharded.
+itself. ``--pods`` prepends a ``pod`` mesh axis (DCN data parallelism
+across ICI domains), and ``--grad-wire`` selects the gradient transport
+for it: ``fp32`` (explicit f32 mean over the pod axis) or ``compressed``
+(SR-to-bf16 wire with persistent error-feedback residuals — half the
+DCN bytes; without a pod axis the compressed wire rides the ``data``
+axis). ``--grad-accum=k`` scans k microbatches over one gathered
+working copy before the single reduce + update. The TrainState sharding
+tree — error-feedback residuals included — is handed to
+``run_training`` so an elastic checkpoint resume re-shards restored
+state onto the *current* mesh instead of restoring it unsharded.
 """
 from __future__ import annotations
 
@@ -27,12 +33,13 @@ from repro.core.policy import get_policy
 from repro.data.synthetic import lm_batches
 from repro.dist import fsdp as F
 from repro.dist import partition as PT
+from repro.dist import transport as TR
 from repro.dist.axes import activation_sharding
 from repro.launch.mesh import make_local_mesh
 from repro.models import registry as R
 from repro.optim import adamw, linear_warmup_cosine
 from repro.train.loop import TrainLoopConfig, run_training
-from repro.train.step import make_fsdp_train_step, make_train_step
+from repro.train.step import make_train_step
 from repro.train.train_state import make_train_state
 
 
@@ -56,6 +63,16 @@ def main():
     ap.add_argument("--fsdp", action="store_true",
                     help="shard params + optimizer state (incl. Kahan "
                          "buffers) over the data axes")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod mesh axis size: DP across ICI domains, "
+                         "gradient reduce over (virtual) DCN")
+    ap.add_argument("--grad-wire", default="fp32",
+                    choices=["fp32", "compressed"],
+                    help="gradient transport on the wire axis: fp32 mean "
+                         "or SR-compressed bf16 with error feedback")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatches scanned per step over one gathered "
+                         "working copy (single reduce + update)")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -64,31 +81,36 @@ def main():
         cfg = cfg.reduced()
     params = R.init(cfg, jax.random.PRNGKey(args.seed), policy.param_dtype)
     opt = adamw(policy, b2=0.997, weight_decay=0.01)
-    state = make_train_state(params, opt)
     lr_schedule = linear_warmup_cosine(
         args.lr, max(args.steps // 20, 1), args.steps)
 
-    dp, mp, fp = args.data_parallel, args.model_parallel, args.fsdp_parallel
+    dp, mp, fp, pods = (args.data_parallel, args.model_parallel,
+                        args.fsdp_parallel, args.pods)
     use_fsdp = args.fsdp or fp > 1
-    if dp * mp * fp > 1:
-        mesh = make_local_mesh(dp, mp, fsdp=fp)
+    if dp * mp * fp * pods > 1:
+        mesh = make_local_mesh(dp, mp, fsdp=fp, pods=pods)
         placement = PT.default_placement(mesh, fsdp=use_fsdp)
-        pspecs = PT.param_specs(state.params, cfg, mesh, placement)
-        shardings = F.train_state_shardings(state, cfg, mesh, placement)
+        pspecs = PT.param_specs(params, cfg, mesh, placement)
+        transport = TR.make_transport(mesh=mesh, placement=placement,
+                                      pspecs=pspecs, wire=args.grad_wire)
+        state = make_train_state(params, opt, transport=transport)
+        shardings = F.train_state_shardings(state, cfg, mesh, placement,
+                                            transport=transport)
         state = jax.device_put(state, shardings)
-        if use_fsdp:
-            step_fn = make_fsdp_train_step(
-                cfg, policy, opt, lr_schedule, pspecs=pspecs,
-                placement=placement, attn_chunk=min(1024, args.seq))
-        else:
-            step_fn = make_train_step(cfg, policy, opt, lr_schedule,
-                                      attn_chunk=min(1024, args.seq))
-        dp_axes = PT.dp_axes(mesh)
-        with mesh, activation_sharding(dp_axes, PT.dp_size(mesh),
+        step_fn = make_train_step(cfg, policy, opt, lr_schedule,
+                                  transport=transport,
+                                  grad_accum=args.grad_accum,
+                                  attn_chunk=min(1024, args.seq))
+        hint_axes, hint_size = transport.hint_axes(mesh)
+        with mesh, activation_sharding(hint_axes, hint_size,
                                        PT.MODEL_AXIS, mp):
             _run(state, step_fn, cfg, args, state_shardings=shardings)
     else:
+        transport = TR.make_transport(wire=args.grad_wire)
+        state = make_train_state(params, opt, transport=transport)
         step_fn = make_train_step(cfg, policy, opt, lr_schedule,
+                                  transport=transport,
+                                  grad_accum=args.grad_accum,
                                   attn_chunk=min(1024, args.seq))
         _run(state, step_fn, cfg, args)
 

@@ -57,12 +57,15 @@ def compressed_psum(grads: PyTree, residuals: PyTree, key: jax.Array,
     res_leaves = treedef.flatten_up_to(residuals)
     keys = jax.random.split(jax.random.fold_in(key, jax.lax.axis_index(axis_name)),
                             len(leaves))
+    # replica count once for the whole tree, not once per leaf (a scalar
+    # psum per gradient leaf was a redundant collective ×|leaves|); psum
+    # of a Python literal is resolved at trace time — no collective at all
+    n = jax.lax.psum(1.0, axis_name)
     out, new_res = [], []
     for g, r, k in zip(leaves, res_leaves, keys):
         q, nr = compress_leaf(g, r, k)
         # the wire format of this psum is bf16: 2 bytes/grad element
         summed = jax.lax.psum(q.astype(jnp.bfloat16), axis_name)
-        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
         out.append(summed.astype(jnp.float32) / n)
         new_res.append(nr)
     return (jax.tree_util.tree_unflatten(treedef, out),

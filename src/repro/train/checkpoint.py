@@ -36,7 +36,7 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "manifest", "CheckpointManager"]
 
 PyTree = Any
 
@@ -101,6 +101,19 @@ def _gc(directory: Path, keep_n: int) -> None:
         shutil.rmtree(p, ignore_errors=True)
 
 
+def manifest(directory: str | Path, *, step: int | None = None) -> dict:
+    """Parsed manifest of a checkpoint (leaf count / shapes / dtypes) —
+    lets a caller reason about the stored layout (e.g. whether it carries
+    gradient-wire residuals, and of what shape) before restoring."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    src = directory / f"step_{step:09d}"
+    return json.loads((src / "manifest.json").read_text())
+
+
 def latest_step(directory: str | Path) -> int | None:
     latest = Path(directory) / "LATEST"
     if not latest.exists():
@@ -113,9 +126,18 @@ def latest_step(directory: str | Path) -> int | None:
 
 
 def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
-            shardings: PyTree | None = None) -> tuple[PyTree, int]:
+            shardings: PyTree | None = None,
+            skip=None) -> tuple[PyTree, int]:
     """Restore into the structure of ``like``. ``shardings`` (a matching
-    tree of jax.sharding.Sharding or None) enables elastic re-sharding."""
+    tree of jax.sharding.Sharding or None) enables elastic re-sharding.
+
+    ``skip`` (a container of leaf indices) drops those stored leaves
+    without reading them — their slots come back as ``None`` and their
+    shapes are not validated against ``like``. The training loop uses it
+    to discard stale gradient-wire residuals (whose stored shape no
+    longer matches) instead of materializing potentially
+    parameter-sized buffers just to throw them away.
+    """
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -130,8 +152,12 @@ def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
     data = np.load(src / "arrays.npz")
     shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(leaves))
+    skip = frozenset(skip or ())
     out = []
     for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+        if i in skip:
+            out.append(None)
+            continue
         arr = data[f"a{i}"]
         want_dtype = ref.dtype if hasattr(ref, "dtype") else None
         if manifest["dtypes"][i] == "bfloat16":
@@ -167,8 +193,8 @@ class CheckpointManager:
             return save(self.directory, step, tree, keep_n=self.keep_n)
         return None
 
-    def restore_latest(self, like: PyTree, shardings=None):
-        return restore(self.directory, like, shardings=shardings)
+    def restore_latest(self, like: PyTree, shardings=None, skip=None):
+        return restore(self.directory, like, shardings=shardings, skip=skip)
 
     def has_checkpoint(self) -> bool:
         return latest_step(self.directory) is not None

@@ -14,6 +14,7 @@ Wraps the jitted train step with the machinery a 1000-node run needs:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import signal
 import time
@@ -21,10 +22,86 @@ from typing import Any, Callable, Iterator
 
 import jax
 
-from repro.train.checkpoint import CheckpointManager
+from repro.train.checkpoint import CheckpointManager, manifest
 from repro.train.train_state import TrainState
 
 __all__ = ["TrainLoopConfig", "run_training"]
+
+# The pre-wire_residuals TrainState layout (3 fields), for recognizing
+# checkpoints written before the field existed — see _restore.
+_LEGACY_STATE = collections.namedtuple(
+    "TrainState", ["step", "params", "opt_state"])
+
+
+def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
+    """Elastic restore, tolerant of gradient-wire residual layout drift
+    in every direction a restart can change the wire:
+
+    * checkpoint without residuals → compressed-wire run: restore
+      everything else, zero-init the error-feedback buffers;
+    * checkpoint with residuals for a *different* wire replica count
+      (pod-axis resize): drop the stale buffers unread (``skip`` — they
+      can be parameter-sized), zero-init at the current shape;
+    * checkpoint with residuals → stateless-transport run (wire
+      downgraded to fp32): drop the stored buffers unread.
+
+    Zero-init is cheap because the buffers hold only last-step
+    quantization error — one uncompensated step. Every fallback is gated
+    on the stored treedef actually matching the hypothesized layout, so
+    an unrelated leaf-count delta — e.g. a Kahan ↔ non-Kahan policy
+    change, which also shifts the count by one param-shaped tree —
+    falls through to ``checkpoint.restore``'s own clear validation
+    error instead of being misdiagnosed as residual drift.
+    """
+    residuals = getattr(state, "wire_residuals", None)
+    n_state = len(jax.tree_util.tree_leaves(state))
+    n_params = len(jax.tree_util.tree_leaves(state.params))
+    man = manifest(mgr.directory)
+    n_ckpt = man["n_leaves"]
+    none_like = lambda tree: jax.tree_util.tree_map(lambda _: None, tree)  # noqa: E731
+    stored_as = lambda tree: man.get("treedef") == str(  # noqa: E731
+        jax.tree_util.tree_structure(tree))
+    if residuals is not None:
+        n_bare = n_state - n_params            # residuals mirror params
+        bare = state._replace(wire_residuals=None)
+        # a checkpoint from before TrainState.wire_residuals existed was
+        # a 3-field namedtuple of the same name — build that treedef
+        # structurally (renders identically) rather than via repr surgery
+        legacy = _LEGACY_STATE(state.step, state.params, state.opt_state)
+        accepted = {str(jax.tree_util.tree_structure(t))
+                    for t in (bare, legacy)}
+        if n_ckpt == n_bare and man.get("treedef") in accepted:
+            bare_sh = (state_shardings._replace(wire_residuals=None)
+                       if state_shardings is not None else None)
+            restored, at = mgr.restore_latest(bare, shardings=bare_sh)
+            log("[loop] checkpoint has no wire_residuals; zero-initialized "
+                "error-feedback buffers")
+            return restored._replace(wire_residuals=residuals), at
+        stored = man["shapes"][n_bare:n_state]
+        ours = [list(l.shape) for l in jax.tree_util.tree_leaves(residuals)]
+        if n_ckpt == n_state and stored != ours and stored_as(state):
+            sh = (state_shardings._replace(wire_residuals=none_like(residuals))
+                  if state_shardings is not None else None)
+            restored, at = mgr.restore_latest(
+                state, shardings=sh, skip=range(n_bare, n_state))
+            log("[loop] wire replica count changed since checkpoint; "
+                "zero-initialized error-feedback buffers")
+            return restored._replace(wire_residuals=residuals), at
+    elif n_ckpt == n_state + n_params:
+        # checkpoint may carry residuals this (stateless) transport has
+        # no use for: params stand in as structure-matching placeholders,
+        # the stored buffers are skipped unread
+        like = state._replace(wire_residuals=state.params)
+        if stored_as(like):
+            sh = (state_shardings._replace(
+                      wire_residuals=none_like(state.params))
+                  if state_shardings is not None else None)
+            restored, at = mgr.restore_latest(
+                like, shardings=sh, skip=range(n_state, n_ckpt))
+            log("[loop] dropping checkpointed wire_residuals (stateless "
+                "gradient transport)")
+            return restored._replace(wire_residuals=None), at
+    return mgr.restore_latest(state, shardings=state_shardings)
 
 
 @dataclasses.dataclass
@@ -37,6 +114,10 @@ class TrainLoopConfig:
     straggler_factor: float = 3.0
     log_every: int = 10
     seed: int = 0
+    # Most-recent metrics rows kept in host memory (the returned
+    # ``history``). Million-step runs would otherwise grow one dict per
+    # step unboundedly; None keeps everything.
+    history_cap: int | None = 10_000
 
 
 def run_training(state: TrainState, train_step: Callable, batches: Iterator,
@@ -45,13 +126,18 @@ def run_training(state: TrainState, train_step: Callable, batches: Iterator,
                  state_shardings=None) -> tuple[TrainState, dict]:
     """Run to ``total_steps`` with checkpoint/restart + retry.
 
-    ``batches`` must be an iterator addressable by step (we re-pull on
-    retry); ``fault_hook(step)`` (tests) may raise to simulate failures.
+    ``batches`` is pulled exactly once per step, *before* the retry
+    loop: a retried step replays the same batch object (retries target
+    transient device/runtime faults, not data poisoning — a poisoned
+    batch that deterministically faults will exhaust the retries and
+    checkpoint-and-raise). ``fault_hook(step)`` (tests) may raise to
+    simulate failures. The returned ``history`` keeps the most recent
+    ``cfg.history_cap`` metric rows.
     """
     mgr = CheckpointManager(cfg.ckpt_dir, every_steps=cfg.ckpt_every,
                             keep_n=cfg.keep_n) if cfg.ckpt_dir else None
     if mgr and mgr.has_checkpoint():
-        state, at = mgr.restore_latest(state, shardings=state_shardings)
+        state, at = _restore(mgr, state, state_shardings, log)
         log(f"[loop] resumed from checkpoint at step {at}")
 
     stop = {"preempted": False}
@@ -76,8 +162,13 @@ def run_training(state: TrainState, train_step: Callable, batches: Iterator,
             try:
                 if fault_hook is not None:
                     fault_hook(step)
-                state, metrics = train_step(state, batch, cfg.seed)
+                # commit to the new state only after the sync point: under
+                # async dispatch a device fault surfaces at block_until_ready,
+                # and retries (and the crash checkpoint) must see the last
+                # good state, not the failed step's poisoned buffers
+                new_state, metrics = train_step(state, batch, cfg.seed)
                 jax.block_until_ready(metrics["loss"])
+                state = new_state
                 break
             except Exception as e:          # noqa: BLE001 — retry wall
                 attempt += 1
@@ -112,6 +203,8 @@ def run_training(state: TrainState, train_step: Callable, batches: Iterator,
             log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
         metrics_hist.append({k: float(jax.device_get(v))
                              for k, v in metrics.items()})
+        if cfg.history_cap is not None and len(metrics_hist) > cfg.history_cap:
+            del metrics_hist[:len(metrics_hist) - cfg.history_cap]
         if stop["preempted"]:
             if mgr:
                 mgr.maybe_save(step + 1, state, force=True)

@@ -7,15 +7,21 @@ policy's compute format (master-copy policies cast a bf16 working copy of
 the weights for compute), gradients land in bf16 and feed the quantized
 optimizer update (Algorithms 2–5).
 
-``make_fsdp_train_step`` is the FSDP variant: parameters and optimizer
-state arrive sharded over the placement's FSDP axis; the step all-gathers
-a compute-format (bf16-wire) working copy for forward/backward, lands
-gradients on the parameter shard layout, and runs the quantized update —
-Kahan compensation included — purely on local shards.
+Every gradient collective goes through a pluggable
+:class:`repro.dist.transport.GradientTransport`: the step calls
+``transport.prepare`` (e.g. the FSDP all-gather of the working copy),
+``transport.reduce`` (fp32 psum / reduce-scatter constraint /
+SR-compressed bf16 wire with error feedback) and ``transport.finalize``
+(e.g. keep parameters sharded) and itself contains no
+placement-specific branches. ``grad_accum=k`` scans k microbatches over
+one prepared working copy — amortizing the FSDP all-gather — before a
+single reduce + optimizer update.
+
+``make_fsdp_train_step`` is a thin delegation that selects the
+reduce-scatter transport from ``pspecs``/``placement``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -24,7 +30,7 @@ import jax.numpy as jnp
 from repro.core.formats import round_nearest
 from repro.core.policy import PrecisionPolicy
 from repro.core.qarith import QArith
-from repro.dist import fsdp as F
+from repro.dist import transport as T
 from repro.dist.partition import Placement
 from repro.models import registry as R
 from repro.train.train_state import TrainState, softmax_xent
@@ -50,20 +56,62 @@ def compute_params(params: PyTree, policy: PrecisionPolicy) -> PyTree:
         lambda w: round_nearest(w, policy.compute_format), params)
 
 
+def _batch_dim(path) -> int:
+    """Batch dim of a batch leaf: 1 for ``mrope_positions`` ((3, B, S)
+    layout — see :func:`repro.dist.partition.batch_specs`), else 0."""
+    names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+    return 1 if names and names[-1] == "mrope_positions" else 0
+
+
+def _split_microbatches(batch: PyTree, k: int, what: str) -> PyTree:
+    """Split every leaf's batch dim into k chunks, chunk dim leading."""
+
+    def split(path, x):
+        bdim = _batch_dim(path)
+        if x.shape[bdim] % k:
+            raise ValueError(
+                f"global batch {x.shape[bdim]} not divisible by {what}={k}")
+        parts = x.shape[:bdim] + (k, x.shape[bdim] // k) + x.shape[bdim + 1:]
+        return jnp.moveaxis(x.reshape(parts), bdim, 0)
+
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
 def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
                     *, remat: bool = True, attn_chunk: int = 1024,
                     loss_fn: Callable | None = None,
                     pspecs: PyTree | None = None,
-                    placement: Placement | None = None):
-    """One builder for both placements: plain DP×TP and FSDP.
+                    placement: Placement | None = None,
+                    transport: "T.GradientTransport | None" = None,
+                    grad_accum: int = 1):
+    """One builder for every placement and gradient wire.
 
-    Without ``pspecs``/``placement`` (or with a placement whose FSDP axis
-    is unset) this is the classic step. With them, the FSDP collectives
-    wrap the same body — see :func:`make_fsdp_train_step`.
+    The gradient path is owned by ``transport``
+    (:class:`repro.dist.transport.GradientTransport`); when omitted it is
+    derived from ``pspecs``/``placement``: an FSDP placement selects the
+    reduce-scatter transport, anything else the implicit-psum default —
+    so existing callers get the historic behaviour unchanged.
+
+    ``grad_accum=k`` splits the batch into k microbatches and scans
+    forward/backward over them, accumulating gradients in f32 against
+    **one** prepared working copy (one FSDP all-gather per step, not per
+    microbatch), then does a single reduce + optimizer update on the
+    mean. With a transport whose ``wire_replicas`` is n > 1 each
+    microbatch is additionally vmapped into n per-wire-replica chunks
+    (``spmd_axis_name`` pins the chunk dim to the wire axis) so the wire
+    reduction is explicit — see :mod:`repro.dist.transport`.
+
+    The reported ``loss`` is the uniform mean over microbatch/chunk
+    losses — identical to the global mean whenever the per-microbatch
+    label masks have equal counts (always true for the synthetic LM
+    streams; a caveat only under ragged ``ignore`` masks).
     """
     qa = QArith(policy)
-    fsdp = (pspecs is not None and placement is not None
-            and placement.fsdp_axis is not None)
+    if transport is None:
+        transport = T.make_transport(placement=placement, pspecs=pspecs)
+    if grad_accum < 1:
+        raise ValueError(f"grad_accum must be >= 1, got {grad_accum}")
+    n_wire = transport.wire_replicas
 
     def _loss(params, batch):
         logits = R.forward_logits(qa, params, cfg, batch, remat=remat,
@@ -72,25 +120,59 @@ def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
             return loss_fn(logits, batch)
         return softmax_xent(logits, batch["labels"])
 
+    def _micro_grads(wc, batch):
+        """Loss + grads of one microbatch; grads stacked (n_wire, ...)
+        on the wire axis when the transport has an explicit wire."""
+        if n_wire > 1:
+            chunks = _split_microbatches(batch, n_wire, "wire_replicas")
+            axes = jax.tree_util.tree_map(lambda _: 0, chunks)
+            loss, grads = jax.vmap(
+                jax.value_and_grad(_loss), in_axes=(None, axes),
+                spmd_axis_name=transport.wire_axis)(wc, chunks)
+            return loss.mean(), grads
+        return jax.value_and_grad(_loss)(wc, batch)
+
     def train_step(state: TrainState, batch, seed) -> tuple[TrainState, dict]:
         key = jax.random.fold_in(jax.random.PRNGKey(seed), state.step)
-        wc = compute_params(state.params, policy)      # local-shard cast
-        if fsdp:
-            wc = F.all_gather_params(wc, pspecs, placement)  # bf16 wire
-        loss, grads = jax.value_and_grad(_loss)(wc, batch)
-        # grads arrive in the compute dtype (bf16 FMAC outputs); the
-        # quantized optimizer consumes them per Algorithms 2–5.
-        if fsdp:
-            grads = F.reduce_scatter_grads(grads, pspecs, placement)
+        wire_key = jax.random.fold_in(key, 7)
+        # local-shard cast, then the transport's pre-forward placement
+        # (FSDP: the bf16-wire all-gather of the working copy)
+        wc = transport.prepare(compute_params(state.params, policy))
+        if grad_accum > 1:
+            mbs = _split_microbatches(batch, grad_accum, "grad_accum")
+            first = jax.tree_util.tree_map(lambda x: x[0], mbs)
+            g_shape = jax.eval_shape(lambda w, m: _micro_grads(w, m)[1],
+                                     wc, first)
+
+            def body(carry, mb):
+                acc_loss, acc = carry
+                loss, grads = _micro_grads(wc, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc_loss + loss, acc), None
+
+            init = (jnp.zeros((), jnp.float32),
+                    jax.tree_util.tree_map(
+                        lambda s: jnp.zeros(s.shape, jnp.float32), g_shape))
+            (loss, grads), _ = jax.lax.scan(body, init, mbs)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = _micro_grads(wc, batch)
+        # grads arrive in the compute dtype (bf16 FMAC outputs; f32 once
+        # accumulated); the transport reduces them across replicas and
+        # the quantized optimizer consumes them per Algorithms 2–5.
+        grads, new_residuals = transport.reduce(
+            grads, state.wire_residuals, wire_key)
         lr = lr_schedule(state.step)
         new_params, new_opt = optimizer.update(
             grads, state.opt_state, state.params,
             step=state.step, key=key, lr=lr)
-        if fsdp:
-            new_params = F.constrain(new_params, pspecs)     # stay sharded
+        new_params = transport.finalize(new_params)
         metrics = {"loss": loss.astype(jnp.float32), "lr": lr,
                    "grad_norm": _global_norm(grads)}
-        return TrainState(state.step + 1, new_params, new_opt), metrics
+        return TrainState(state.step + 1, new_params, new_opt,
+                          new_residuals), metrics
 
     return train_step
 
@@ -98,7 +180,9 @@ def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
 def make_fsdp_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
                          *, pspecs: PyTree, placement: Placement,
                          remat: bool = True, attn_chunk: int = 1024,
-                         loss_fn: Callable | None = None):
+                         loss_fn: Callable | None = None,
+                         transport: "T.GradientTransport | None" = None,
+                         grad_accum: int = 1):
     """FSDP-aware train step (params + optimizer state sharded per ``pspecs``).
 
     Collective structure per step:
@@ -119,11 +203,15 @@ def make_fsdp_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
 
     Outside a mesh (or with no FSDP axis in the placement) every
     collective helper is a no-op and this reduces to ``make_train_step``
-    — which is also literally what it delegates to.
+    — which is also literally what it delegates to, with the
+    reduce-scatter transport derived from ``pspecs``/``placement``
+    (or an explicit ``transport``, e.g. the compressed wire stacked on
+    the FSDP inner).
     """
     return make_train_step(cfg, policy, optimizer, lr_schedule, remat=remat,
                            attn_chunk=attn_chunk, loss_fn=loss_fn,
-                           pspecs=pspecs, placement=placement)
+                           pspecs=pspecs, placement=placement,
+                           transport=transport, grad_accum=grad_accum)
 
 
 def _global_norm(tree: PyTree) -> jax.Array:

@@ -15,10 +15,26 @@ class TrainState(NamedTuple):
     step: jax.Array          # i32 scalar
     params: PyTree           # storage-format weights (master f32 if policy)
     opt_state: PyTree
+    # Error-feedback residuals of a stateful gradient transport
+    # (repro.dist.transport.CompressedWire): one f32 buffer per wire
+    # replica per parameter leaf, shape (wire_replicas, *param_shape).
+    # None under stateless transports — a None subtree contributes no
+    # leaves, so checkpoints written before this field existed restore
+    # unchanged (and run_training zero-fills residuals when resuming a
+    # compressed-wire run from such a checkpoint).
+    wire_residuals: PyTree | None = None
 
 
-def make_train_state(params: PyTree, optimizer) -> TrainState:
-    return TrainState(jnp.zeros((), jnp.int32), params, optimizer.init(params))
+def make_train_state(params: PyTree, optimizer, *,
+                     transport=None) -> TrainState:
+    """Fresh state at step 0. ``transport`` (a
+    :class:`repro.dist.transport.GradientTransport`) initializes its
+    error-feedback residuals into the state; omit it (or pass a
+    stateless transport) and ``wire_residuals`` stays ``None``."""
+    residuals = transport.init_residuals(params) if transport is not None \
+        else None
+    return TrainState(jnp.zeros((), jnp.int32), params,
+                      optimizer.init(params), residuals)
 
 
 def softmax_xent(logits: jax.Array, labels: jax.Array, *, ignore: int = -1

@@ -131,6 +131,32 @@ class TestHloAnalysis:
         assert cost.flops == pytest.approx(expect, rel=0.01), \
             (cost.flops, expect)
 
+    def test_collective_bytes_by_dtype(self):
+        """Per-dtype collective accounting (the dry-run artifact field):
+        operand bytes land under their HLO dtype, while loops multiply."""
+        from repro.launch.hlo_analysis import analyze_hlo
+        txt = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: bf16[8,4], p1: f32[16]) -> (bf16[8,4], f32[16]) {
+  %p0 = bf16[8,4]{1,0} parameter(0)
+  %p1 = f32[16]{0} parameter(1)
+  %ar0 = bf16[8,4]{1,0} all-reduce(bf16[8,4]{1,0} %p0), to_apply=%add
+  %ar1 = f32[16]{0} all-reduce(f32[16]{0} %p1), to_apply=%add
+  ROOT %t = (bf16[8,4]{1,0}, f32[16]{0}) tuple(%ar0, %ar1)
+}
+"""
+        cost = analyze_hlo(txt)
+        by = cost.collective_bytes_by_dtype["all-reduce"]
+        assert by == {"bf16": 8 * 4 * 2, "f32": 16 * 4}, by
+        assert cost.collectives["all-reduce"]["count"] == 2
+
 
 class TestData:
     def test_lm_stream_deterministic_and_learnable(self):
