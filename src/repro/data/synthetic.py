@@ -59,10 +59,14 @@ class TokenStream:
         return toks.T  # (B, S+1)
 
 
-def lm_batches(vocab: int, batch: int, seq: int, *, seed: int = 0
-               ) -> Iterator[dict]:
+def lm_batches(vocab: int, batch: int, seq: int, *, seed: int = 0,
+               start_step: int = 0) -> Iterator[dict]:
+    """Step-keyed LM stream: batch i is a pure function of (seed, i), so
+    ``start_step=k`` yields exactly the suffix of the ``start_step=0``
+    stream from batch k on — the resume contract: a run restored at
+    step k continues the stream instead of replaying batches 0..k-1."""
     stream = TokenStream(vocab, seed=seed)
-    i = 0
+    i = start_step
     while True:
         toks = stream.batch(jax.random.fold_in(jax.random.PRNGKey(seed), i),
                             batch, seq)

@@ -25,11 +25,17 @@ reduce-scatter / SR-compressed bf16 wire with error feedback) that the
 train step delegates every gradient collective to, selected per mesh
 axis (``make_transport``).
 
+:mod:`repro.dist.multihost` owns the ``jax.distributed`` process
+lifecycle (one process per host, gloo/DCN): env-driven ``initialize``,
+process-0 semantics, and cross-host barriers — all no-ops in a
+single-process run.
+
 Convention (see ROADMAP): the ``model`` mesh axis carries tensor/expert
 parallelism; every other axis (``data``, ``fsdp``, ``pod``) carries data
 parallelism — with parameters and optimizer state additionally sharded
 over the placement's FSDP axis when one is set.
 """
+from repro.dist import multihost
 from repro.dist.axes import (ActivationSharding, activation_sharding,
                              current_sharding, padded_head_count,
                              shard_batch, shard_heads)
@@ -46,7 +52,7 @@ from repro.dist.transport import (CompressedWire, Fp32Psum,
 
 __all__ = [
     "GradientTransport", "Fp32Psum", "ReduceScatter", "CompressedWire",
-    "make_transport",
+    "make_transport", "multihost",
     "ActivationSharding", "activation_sharding", "current_sharding",
     "padded_head_count", "shard_batch", "shard_heads",
     "Placement", "default_placement",

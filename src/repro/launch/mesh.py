@@ -13,7 +13,7 @@ from repro.dist import partition as PT
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
-def _validated_mesh(shape, axes):
+def _validated_mesh(shape, axes, devices=None):
     unknown = [a for a in axes if a not in PT.KNOWN_AXES]
     if unknown:
         raise ValueError(
@@ -21,7 +21,20 @@ def _validated_mesh(shape, axes):
             f"understand {list(PT.KNOWN_AXES)}")
     if len(set(axes)) != len(axes):
         raise ValueError(f"duplicate mesh axis names: {axes}")
-    return jax.make_mesh(shape, axes)
+    import math
+    want = math.prod(shape)
+    have = len(devices) if devices is not None else jax.device_count()
+    if want > have:
+        # a *smaller* mesh is fine (jax.make_mesh takes the first `want`
+        # devices — single-process tests rely on it); an oversized one
+        # fails here with the process topology instead of deep in XLA
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {want} devices but "
+            f"only {have} are visible ({jax.process_count()} process(es) "
+            f"× {jax.local_device_count()} local) — under jax.distributed "
+            f"the mesh spans every host's devices; size the axes to the "
+            f"global count")
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False, fsdp: int = 1):
@@ -48,8 +61,13 @@ def make_production_mesh(*, multi_pod: bool = False, fsdp: int = 1):
 
 
 def make_local_mesh(data: int = 1, model: int = 1, fsdp: int = 1,
-                    pods: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU).
+                    pods: int = 1, *, devices=None):
+    """Small mesh over whatever devices exist (tests / CPU / multi-host).
+
+    Under ``jax.distributed`` the default device set is *global* — one
+    axis of size ``process_count × local_devices`` gives cross-host data
+    parallelism (gradient collectives ride gloo/DCN). ``devices``
+    overrides the set explicitly (order defines mesh position).
 
     ``fsdp > 1`` adds a dedicated ``fsdp`` axis between ``data`` and
     ``model`` (e.g. ``make_local_mesh(2, 2, fsdp=2)`` is the 8-device
@@ -67,4 +85,4 @@ def make_local_mesh(data: int = 1, model: int = 1, fsdp: int = 1,
     if pods > 1:
         shape = (pods,) + shape
         axes = (PT.POD_AXIS,) + axes
-    return _validated_mesh(shape, axes)
+    return _validated_mesh(shape, axes, devices)

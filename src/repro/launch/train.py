@@ -5,8 +5,14 @@
         --steps 300 --batch 8 --seq 64 --ckpt-dir /tmp/run1
 
 On a real cluster this same entry point runs under ``jax.distributed``
-(one process per host; see README §Deployment); the mesh axes and
-activation-sharding context are installed exactly as in the dry-run.
+— one process per host, joined via ``--coordinator/--num-processes/
+--process-id`` or the ``REPRO_*`` environment variables that
+``tools/dist_launch.py`` sets (see docs/multihost.md). The mesh axes
+and activation-sharding context are installed exactly as in the
+dry-run; the mesh spans the *global* device set, checkpoints are
+committed by process 0 only, and every process barriers around
+restore. With no explicit mesh flags a multi-process run defaults to
+data-parallelism over all global devices.
 
 ``--fsdp`` shards parameters *and* all optimizer state (moments, Kahan
 compensation, SR residuals) over the data axes — a dedicated ``fsdp``
@@ -32,6 +38,7 @@ import jax.numpy as jnp
 from repro.core.policy import get_policy
 from repro.data.synthetic import lm_batches
 from repro.dist import fsdp as F
+from repro.dist import multihost as MH
 from repro.dist import partition as PT
 from repro.dist import transport as TR
 from repro.dist.axes import activation_sharding
@@ -73,7 +80,29 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1,
                     help="microbatches scanned per step over one gathered "
                          "working copy (single reduce + update)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of the jax.distributed coordinator "
+                         "(process 0); defaults to $REPRO_COORDINATOR")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total jax.distributed process count "
+                         "(default $REPRO_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank (default $REPRO_PROCESS_ID)")
+    ap.add_argument("--sync-ckpt", action="store_true",
+                    help="commit checkpoints inline instead of on the "
+                         "background writer thread")
+    ap.add_argument("--spike-factor", type=float, default=None,
+                    help="loss-spike monitor: roll back to the last good "
+                         "checkpoint after --spike-patience consecutive "
+                         "steps with loss > factor × EWMA (or non-finite)")
+    ap.add_argument("--spike-patience", type=int, default=2)
+    ap.add_argument("--max-rollbacks", type=int, default=2)
     args = ap.parse_args()
+
+    # must precede any backend/device use in the process
+    MH.initialize(coordinator=args.coordinator,
+                  num_processes=args.num_processes,
+                  process_id=args.process_id)
 
     policy = get_policy(args.policy)
     cfg = R.get_config(args.arch)
@@ -86,6 +115,11 @@ def main():
 
     dp, mp, fp, pods = (args.data_parallel, args.model_parallel,
                         args.fsdp_parallel, args.pods)
+    if MH.active() and dp * mp * fp * pods == 1:
+        # multi-process with no explicit topology: data-parallel over
+        # every global device (a single-device mesh would leave the
+        # other hosts' devices idle and the collectives unformed)
+        dp = jax.device_count()
     use_fsdp = args.fsdp or fp > 1
     if dp * mp * fp * pods > 1:
         mesh = make_local_mesh(dp, mp, fsdp=fp, pods=pods)
@@ -116,16 +150,26 @@ def main():
 
 
 def _run(state, step_fn, cfg, args, state_shardings=None):
-    batches = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    def batches(start_step):
+        # step-keyed stream: a resume (or spike rollback) at step k
+        # continues with batch k — never replays batches 0..k-1
+        return lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed,
+                          start_step=start_step)
+    log = print if MH.is_primary() else (lambda *_a, **_k: None)
     state, info = run_training(
         state, jax.jit(step_fn), batches,
         TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                        ckpt_every=args.ckpt_every, seed=args.seed),
-        state_shardings=state_shardings)
+                        ckpt_every=args.ckpt_every, seed=args.seed,
+                        async_saves=not args.sync_ckpt,
+                        spike_factor=args.spike_factor,
+                        spike_patience=args.spike_patience,
+                        max_rollbacks=args.max_rollbacks),
+        log=log, state_shardings=state_shardings)
     last = info["history"][-1] if info["history"] else {}
-    print(f"[train] done at step {int(jax.device_get(state.step))}; "
-          f"final loss {last.get('loss'):.4f}; "
-          f"stragglers={info['stragglers']} preempted={info['preempted']}")
+    log(f"[train] done at step {int(jax.device_get(state.step))}; "
+        f"final loss {last.get('loss'):.4f}; "
+        f"stragglers={info['stragglers']} preempted={info['preempted']} "
+        f"rollbacks={info['rollbacks']}")
 
 
 if __name__ == "__main__":

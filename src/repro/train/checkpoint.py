@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: atomic, keep-N, mesh-elastic.
+"""Fault-tolerant checkpointing: atomic, async, keep-N, mesh-elastic.
 
 Layout (one directory per step)::
 
@@ -7,16 +7,34 @@ Layout (one directory per step)::
         arrays.npz         # flattened leaves, key = leaf index
     <dir>/LATEST           # text file: "step_000123" (atomic rename commit)
 
-Design points for 1000+ node deployments (single-process container ⇒
-process-0 semantics; multi-host notes in README):
+Design points for 1000+ node deployments:
 
 * **Atomicity** — writes go to ``<dir>/tmp.<step>.<nonce>`` and are
   committed by a single ``os.replace`` of the directory name followed by
   an ``os.replace`` of the LATEST pointer; a crash mid-write leaves only
-  garbage tmp dirs which are GC'd on the next save.
-* **Elasticity** — arrays are stored *unsharded* (gathered), so a restore
-  may target a different mesh / device count / sharding; ``restore``
-  device_puts onto the provided shardings (or host) — this is the
+  garbage tmp dirs, GC'd once they exceed a staleness threshold (never
+  while a live writer owns them — saves may be in flight concurrently).
+* **Crash-safe discovery** — LATEST is a pointer, not the source of
+  truth: when it is missing or dangles (crash between the two rename
+  commits), :func:`latest_step` falls back to the newest ``step_*`` dir
+  with a valid manifest and repairs the pointer.
+* **Asynchrony** — :class:`CheckpointManager` with ``async_saves=True``
+  snapshots leaves off-device synchronously (cheap) and serializes +
+  commits in a single background thread behind a bounded queue, so the
+  train step never blocks on an ``npz`` write. One FIFO worker means
+  commits happen in submission order — a step-N snapshot can never
+  commit after step-N+k. ``drain()`` blocks until the queue is empty
+  and re-raises any background failure; the training loop drains on
+  exit and on SIGTERM.
+* **Multi-host** (``jax.distributed``, one process per host) —
+  :func:`snapshot` is *collective*: every process must call it at the
+  same step (non-fully-addressable arrays are assembled with
+  ``process_allgather``), but only process 0 touches the filesystem.
+  All processes see the same paths (shared filesystem assumed; see
+  docs/multihost.md).
+* **Elasticity** — arrays are stored *unsharded* (gathered), so a
+  restore may target a different mesh / device count / sharding;
+  ``restore`` device_puts onto the provided shardings (or host) — the
   re-shard-on-resume path used after shrinking/growing the cluster.
 * **keep_n** — bounded disk usage, oldest-first GC, never GC'ing the
   LATEST target.
@@ -25,9 +43,12 @@ process-0 semantics; multi-host notes in README):
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import queue
 import shutil
+import threading
 import time
 import uuid
 from pathlib import Path
@@ -36,43 +57,85 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "manifest", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "manifest", "snapshot",
+           "Snapshot", "AsyncCheckpointer", "CheckpointManager"]
 
 PyTree = Any
 
+# Tmp dirs from a *crashed* writer are garbage; tmp dirs from a *live*
+# concurrent writer (async saves) are not. GC can't tell them apart by
+# name, so it only removes tmp dirs that (a) no writer in this process
+# owns and (b) are older than this threshold — far longer than any
+# serialize+rename takes, far shorter than a training run.
+TMP_STALE_SECS = 3600.0
+_IN_FLIGHT: set[str] = set()
+_IN_FLIGHT_LOCK = threading.Lock()
 
-def _leaf_to_np(x) -> np.ndarray:
-    x = jax.device_get(x)
-    arr = np.asarray(x)
-    if arr.dtype == jax.numpy.bfloat16:
-        # store bf16 as raw uint16 with a dtype tag (npz has no bf16)
-        return arr.view(np.uint16)
+
+def _is_primary() -> bool:
+    return jax.process_index() == 0
+
+
+def _leaf_to_host(x) -> np.ndarray:
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        # multi-host: the local shards don't cover the value — assemble
+        # the global array (collective; every process participates)
+        from jax.experimental import multihost_utils
+        x = multihost_utils.process_allgather(x, tiled=True)
+    arr = np.asarray(jax.device_get(x))
     return arr
 
 
-def save(directory: str | Path, step: int, tree: PyTree, *,
-         keep_n: int = 3, extra: dict | None = None) -> Path:
+@dataclasses.dataclass
+class Snapshot:
+    """An off-device copy of a train-state tree, ready to serialize.
+
+    Produced synchronously (and collectively, under multi-host) by
+    :func:`snapshot`; committed to disk by :func:`_commit` — either
+    inline (``save``) or on the :class:`AsyncCheckpointer` thread.
+    """
+    step: int
+    arrays: dict[str, np.ndarray]
+    manifest: dict
+
+
+def snapshot(tree: PyTree, step: int, *, extra: dict | None = None) -> Snapshot:
+    """Copy every leaf off-device. Collective under multi-host (every
+    process must call at the same step, in the same tree order)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host = [_leaf_to_host(l) for l in leaves]
+    man = {
+        "step": int(step),
+        "time": time.time(),
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": [str(a.dtype) for a in host],
+        "shapes": [list(a.shape) for a in host],
+        "extra": extra or {},
+    }
+    arrays = {}
+    for i, arr in enumerate(host):
+        if arr.dtype == jax.numpy.bfloat16:
+            # store bf16 as raw uint16 with a dtype tag (npz has no bf16)
+            arr = arr.view(np.uint16)
+        arrays[f"a{i}"] = arr
+    return Snapshot(int(step), arrays, man)
+
+
+def _commit(directory: Path, snap: Snapshot, keep_n: int) -> Path:
+    """Serialize + atomically commit a snapshot (tmp dir → rename →
+    LATEST rename). Safe to run off-thread; registers its tmp dir so a
+    concurrent ``_gc`` never deletes it mid-write."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    tmp = directory / f"tmp.{step}.{uuid.uuid4().hex[:8]}"
-    tmp.mkdir()
+    tmp = directory / f"tmp.{snap.step}.{uuid.uuid4().hex[:8]}"
+    with _IN_FLIGHT_LOCK:
+        _IN_FLIGHT.add(str(tmp))
     try:
-        manifest = {
-            "step": int(step),
-            "time": time.time(),
-            "treedef": str(treedef),
-            "n_leaves": len(leaves),
-            "dtypes": [str(jax.numpy.asarray(l).dtype) for l in leaves],
-            "shapes": [list(np.shape(l)) for l in leaves],
-            "extra": extra or {},
-        }
-        arrays = {}
-        for i, leaf in enumerate(leaves):
-            arrays[f"a{i}"] = _leaf_to_np(leaf)
-        np.savez(tmp / "arrays.npz", **arrays)
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        final = directory / f"step_{step:09d}"
+        tmp.mkdir()
+        np.savez(tmp / "arrays.npz", **snap.arrays)
+        (tmp / "manifest.json").write_text(json.dumps(snap.manifest))
+        final = directory / f"step_{snap.step:09d}"
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -83,11 +146,26 @@ def save(directory: str | Path, step: int, tree: PyTree, *,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    finally:
+        with _IN_FLIGHT_LOCK:
+            _IN_FLIGHT.discard(str(tmp))
     _gc(directory, keep_n)
     return final
 
 
-def _gc(directory: Path, keep_n: int) -> None:
+def save(directory: str | Path, step: int, tree: PyTree, *,
+         keep_n: int = 3, extra: dict | None = None) -> Path:
+    """Synchronous snapshot + commit. Collective under multi-host
+    (every process snapshots; only process 0 writes)."""
+    snap = snapshot(tree, step, extra=extra)
+    final = Path(directory) / f"step_{step:09d}"
+    if not _is_primary():
+        return final
+    return _commit(Path(directory), snap, keep_n)
+
+
+def _gc(directory: Path, keep_n: int, *,
+        stale_secs: float = TMP_STALE_SECS) -> None:
     keep = None
     latest = directory / "LATEST"
     if latest.exists():
@@ -97,8 +175,28 @@ def _gc(directory: Path, keep_n: int) -> None:
     for p in excess:
         if p.name != keep:
             shutil.rmtree(p, ignore_errors=True)
-    for p in directory.glob("tmp.*"):
-        shutil.rmtree(p, ignore_errors=True)
+    # tmp dirs: only reap strays from *crashed* writers — never a dir a
+    # live writer in this process owns, never anything recent enough to
+    # be another process's in-flight write
+    now = time.time()
+    for pattern in ("tmp.*", ".latest.*"):
+        for p in directory.glob(pattern):
+            with _IN_FLIGHT_LOCK:
+                if str(p) in _IN_FLIGHT:
+                    continue
+            try:
+                age = now - p.stat().st_mtime
+            except OSError:
+                continue  # racing another GC; already gone
+            if age < stale_secs:
+                continue
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
 
 
 def manifest(directory: str | Path, *, step: int | None = None) -> dict:
@@ -114,15 +212,45 @@ def manifest(directory: str | Path, *, step: int | None = None) -> dict:
     return json.loads((src / "manifest.json").read_text())
 
 
-def latest_step(directory: str | Path) -> int | None:
-    latest = Path(directory) / "LATEST"
-    if not latest.exists():
+def _valid_step_dir(p: Path) -> bool:
+    try:
+        json.loads((p / "manifest.json").read_text())
+        return True
+    except (OSError, ValueError):
+        return False
+
+
+def latest_step(directory: str | Path, *, repair: bool = True) -> int | None:
+    """Newest restorable step, honoring LATEST when it is sound.
+
+    LATEST is only a pointer: a crash between the step-dir rename and
+    the LATEST rename (or between ``rmtree(final)`` and the step-dir
+    rename on an overwrite) leaves it missing or naming a dir without a
+    manifest. Instead of declaring the run unresumable, fall back to
+    the newest ``step_*`` dir whose manifest parses, and (process 0,
+    best-effort) repair LATEST to point there.
+    """
+    directory = Path(directory)
+    latest = directory / "LATEST"
+    if latest.exists():
+        name = latest.read_text().strip()
+        if _valid_step_dir(directory / name):
+            return int(name.split("_")[-1])
+    fallback = None
+    for p in sorted(directory.glob("step_*"), reverse=True):
+        if p.is_dir() and _valid_step_dir(p):
+            fallback = p
+            break
+    if fallback is None:
         return None
-    name = latest.read_text().strip()
-    target = Path(directory) / name
-    if not (target / "manifest.json").exists():
-        return None
-    return int(name.split("_")[-1])
+    if repair and _is_primary():
+        try:
+            ptr = directory / f".latest.{uuid.uuid4().hex[:8]}"
+            ptr.write_text(fallback.name)
+            os.replace(ptr, latest)
+        except OSError:
+            pass  # read-only or racing repair: the fallback scan still works
+    return int(fallback.name.split("_")[-1])
 
 
 def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
@@ -179,22 +307,124 @@ def restore(directory: str | Path, like: PyTree, *, step: int | None = None,
     return jax.tree_util.tree_unflatten(treedef, out), step
 
 
+class AsyncCheckpointer:
+    """Single background writer: FIFO commits, bounded queue.
+
+    ``submit`` blocks once ``max_pending`` snapshots are queued
+    (backpressure — bounded host memory, and the writer can never fall
+    unboundedly behind the train loop). One worker thread consuming a
+    FIFO queue means commits land in submission order: a step-N
+    snapshot can never commit after a later step's. A failed background
+    commit is re-raised on the next ``submit``/``drain``.
+    """
+
+    _CLOSE = object()
+
+    def __init__(self, *, max_pending: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._thread: threading.Thread | None = None
+        self._err: BaseException | None = None
+        self._lock = threading.Lock()
+
+    def _ensure_thread(self):
+        with self._lock:
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._worker, name="repro-ckpt-writer", daemon=True)
+                self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is self._CLOSE:
+                    return
+                directory, snap, keep_n = item
+                try:
+                    _commit(directory, snap, keep_n)
+                except BaseException as e:  # noqa: BLE001 — surfaced at drain
+                    self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("async checkpoint commit failed") from err
+
+    def submit(self, directory: Path, snap: Snapshot, keep_n: int) -> None:
+        self._raise_pending()
+        self._ensure_thread()
+        self._q.put((Path(directory), snap, keep_n))
+
+    def drain(self) -> None:
+        """Block until every queued snapshot is committed; re-raise any
+        background failure. Call before reading LATEST, on preemption,
+        and at loop exit."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        self.drain()
+        with self._lock:
+            t = self._thread
+            self._thread = None
+        if t is not None and t.is_alive():
+            self._q.put(self._CLOSE)
+            t.join(timeout=30)
+
+
 class CheckpointManager:
-    """Cadence + retention policy around save/restore."""
+    """Cadence + retention policy around save/restore, optionally async.
+
+    ``async_saves=True`` moves serialization + commit to a background
+    thread (:class:`AsyncCheckpointer`); ``maybe_save`` then only pays
+    the off-device snapshot. Callers that read checkpoints back (or
+    exit) must ``drain()`` first — ``run_training`` does, on every exit
+    path. Under multi-host every process calls ``maybe_save`` at the
+    same steps (the snapshot is collective); only process 0 writes.
+    """
 
     def __init__(self, directory: str | Path, *, every_steps: int = 100,
-                 keep_n: int = 3):
+                 keep_n: int = 3, async_saves: bool = False,
+                 max_pending: int = 2):
         self.directory = Path(directory)
         self.every_steps = every_steps
         self.keep_n = keep_n
+        self._async = (AsyncCheckpointer(max_pending=max_pending)
+                       if async_saves else None)
 
     def maybe_save(self, step: int, tree: PyTree, *, force: bool = False):
-        if force or (self.every_steps and step % self.every_steps == 0 and step > 0):
+        if not (force or (self.every_steps and step % self.every_steps == 0
+                          and step > 0)):
+            return None
+        if self._async is None:
             return save(self.directory, step, tree, keep_n=self.keep_n)
-        return None
+        snap = snapshot(tree, step)
+        final = self.directory / f"step_{step:09d}"
+        if _is_primary():
+            self._async.submit(self.directory, snap, self.keep_n)
+        return final
+
+    def drain(self):
+        if self._async is not None:
+            self._async.drain()
+
+    def close(self):
+        if self._async is not None:
+            self._async.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def restore_latest(self, like: PyTree, shardings=None, skip=None):
+        self.drain()
         return restore(self.directory, like, shardings=shardings, skip=skip)
 
     def has_checkpoint(self) -> bool:
+        self.drain()
         return latest_step(self.directory) is not None

@@ -3,22 +3,36 @@
 Wraps the jitted train step with the machinery a 1000-node run needs:
 
 * resume-from-latest on startup (elastic: reshard onto the current mesh)
-* periodic atomic checkpoints (+ checkpoint-on-SIGTERM preemption hook)
+* periodic atomic checkpoints, serialized + committed on a background
+  thread (``async_saves``) so the step never blocks on an npz write;
+  every exit path — completion, preemption, crash — drains the writer
+* checkpoint-on-SIGTERM preemption hook (snapshot, drain, exit)
 * bounded retry around the step (transient-failure tolerance; a
   fault-injection hook exists for tests)
+* a loss-spike / divergence monitor (``spike_factor``) that rolls the
+  run back to the last good checkpoint and widens the checkpoint
+  cadence, instead of checkpointing over it with poisoned state
 * straggler telemetry: per-step wall-time EWMA; steps slower than
   ``straggler_factor ×`` EWMA are counted and surfaced — the deployment
   runbook (README) reacts by excluding the slow host and resuming from
   the latest checkpoint on a shrunk mesh (the elastic restore path).
-* checkpoint cadence tightens automatically while stragglers persist.
+* checkpoint cadence tightens automatically while stragglers persist
+  (single-process only: cadence must stay identical across hosts, and
+  straggler counts are local observations).
+
+Under ``jax.distributed`` (one process per host — see
+:mod:`repro.dist.multihost`) the loop is collective: every process runs
+it in lockstep, checkpoint snapshots gather across hosts, only process
+0 writes, and all processes barrier around restore.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import signal
 import time
-from typing import Any, Callable, Iterator
+from typing import Any, Callable, Iterator, Union
 
 import jax
 
@@ -31,6 +45,30 @@ __all__ = ["TrainLoopConfig", "run_training"]
 # checkpoints written before the field existed — see _restore.
 _LEGACY_STATE = collections.namedtuple(
     "TrainState", ["step", "params", "opt_state"])
+
+# ``batches``: either a plain iterator, or a callable mapping the start
+# step to an iterator — the loop calls it after restore (and again after
+# a rollback) so the stream begins at the batch the run actually needs.
+Batches = Union[Iterator, Callable[[int], Iterator]]
+
+
+def _barrier(tag: str) -> None:
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(tag)
+
+
+def _agree_preempted(local: bool, multiproc: bool) -> bool:
+    """Preemption decision, agreed across hosts. SIGTERM lands at
+    slightly different step boundaries on different processes; the
+    checkpoint snapshot is collective, so every process must stop (and
+    force-save) at the *same* step — any host's signal stops them all."""
+    if not multiproc:
+        return local
+    import numpy as np
+    from jax.experimental import multihost_utils
+    flags = multihost_utils.process_allgather(np.int32(local))
+    return bool(np.max(flags) > 0)
 
 
 def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
@@ -118,27 +156,71 @@ class TrainLoopConfig:
     # ``history``). Million-step runs would otherwise grow one dict per
     # step unboundedly; None keeps everything.
     history_cap: int | None = 10_000
+    # Serialize + commit checkpoints on a background thread; the step
+    # only pays the off-device snapshot. Bounded by max_pending_saves
+    # (submit blocks once that many snapshots are queued).
+    async_saves: bool = True
+    max_pending_saves: int = 2
+    # Loss-spike / divergence monitor: after ``spike_patience``
+    # consecutive steps with non-finite loss or loss >
+    # ``spike_factor × EWMA``, roll back to the last good checkpoint and
+    # multiply the checkpoint cadence by ``rollback_widen`` (more steps
+    # of evidence before the next checkpoint can trust the post-spike
+    # trajectory). None disables. Requires ckpt_dir.
+    spike_factor: float | None = None
+    spike_patience: int = 2
+    max_rollbacks: int = 2
+    rollback_widen: int = 2
 
 
-def run_training(state: TrainState, train_step: Callable, batches: Iterator,
+def run_training(state: TrainState, train_step: Callable, batches: Batches,
                  cfg: TrainLoopConfig, *, log: Callable[[str], None] = print,
                  fault_hook: Callable[[int], None] | None = None,
                  state_shardings=None) -> tuple[TrainState, dict]:
     """Run to ``total_steps`` with checkpoint/restart + retry.
 
-    ``batches`` is pulled exactly once per step, *before* the retry
+    ``batches`` may be a callable ``start_step -> iterator`` — the loop
+    invokes it *after* resume (and after a rollback), so a resumed run
+    continues the stream at the restored step instead of replaying the
+    first ``step0`` batches. A plain iterator is also accepted; the
+    caller is then responsible for advancing it past already-trained
+    steps (the spike monitor additionally requires the callable form —
+    a rollback must rewind the stream).
+
+    The stream is pulled exactly once per step, *before* the retry
     loop: a retried step replays the same batch object (retries target
     transient device/runtime faults, not data poisoning — a poisoned
     batch that deterministically faults will exhaust the retries and
     checkpoint-and-raise). ``fault_hook(step)`` (tests) may raise to
     simulate failures. The returned ``history`` keeps the most recent
-    ``cfg.history_cap`` metric rows.
+    ``cfg.history_cap`` metric rows; rows are materialized from device
+    arrays in batches at ``log_every`` cadence (and at exit), not per
+    step — per-step ``device_get`` of every metric serializes dispatch.
     """
     mgr = CheckpointManager(cfg.ckpt_dir, every_steps=cfg.ckpt_every,
-                            keep_n=cfg.keep_n) if cfg.ckpt_dir else None
+                            keep_n=cfg.keep_n,
+                            async_saves=cfg.async_saves,
+                            max_pending=cfg.max_pending_saves,
+                            ) if cfg.ckpt_dir else None
+    batches_fn = batches if callable(batches) else None
+    if cfg.spike_factor is not None:
+        if mgr is None:
+            raise ValueError("spike_factor requires ckpt_dir "
+                             "(rollback needs a checkpoint to return to)")
+        if batches_fn is None:
+            raise ValueError("spike_factor requires callable batches "
+                             "(a rollback must rewind the data stream)")
+    multiproc = jax.process_count() > 1
+    if multiproc:
+        # every process must agree on whether a checkpoint exists before
+        # any of them decides to restore (primary may still be
+        # committing from a previous incarnation on a shared FS)
+        _barrier("repro:loop:start")
     if mgr and mgr.has_checkpoint():
         state, at = _restore(mgr, state, state_shardings, log)
         log(f"[loop] resumed from checkpoint at step {at}")
+        if multiproc:
+            _barrier("repro:loop:restored")
 
     stop = {"preempted": False}
 
@@ -152,65 +234,144 @@ def run_training(state: TrainState, train_step: Callable, batches: Iterator,
 
     ewma = None
     stragglers = 0
-    metrics_hist = []
-    step0 = int(jax.device_get(state.step))
-    for step in range(step0, cfg.total_steps):
-        batch = next(batches)
-        t0 = time.time()
-        attempt = 0
-        while True:
-            try:
-                if fault_hook is not None:
-                    fault_hook(step)
-                # commit to the new state only after the sync point: under
-                # async dispatch a device fault surfaces at block_until_ready,
-                # and retries (and the crash checkpoint) must see the last
-                # good state, not the failed step's poisoned buffers
-                new_state, metrics = train_step(state, batch, cfg.seed)
-                jax.block_until_ready(metrics["loss"])
-                state = new_state
-                break
-            except Exception as e:          # noqa: BLE001 — retry wall
-                attempt += 1
-                if attempt > cfg.max_retries_per_step:
-                    if mgr:
-                        mgr.maybe_save(step, state, force=True)
-                        log(f"[loop] step {step} failed {attempt}×; "
-                            f"checkpointed for external restart: {e}")
-                    raise
-                log(f"[loop] step {step} retry {attempt} after {type(e).__name__}")
-        dt = time.time() - t0
-        # the first steps carry jit-compile time — keep them out of the
-        # EWMA or a 20 s compile masks every real straggler for hundreds
-        # of steps
-        if step < step0 + 2:
-            dt_for_stats = None
-        else:
-            dt_for_stats = dt
-        straggling = (ewma is not None and dt_for_stats is not None
-                      and dt > cfg.straggler_factor * ewma)
-        if dt_for_stats is not None and not straggling:
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-        if straggling:
-            stragglers += 1
-            log(f"[loop] straggler: step {step} took {dt:.2f}s (ewma {ewma:.2f}s)")
-        if mgr:
-            every = max(cfg.ckpt_every // (2 if stragglers > 3 else 1), 1)
-            mgr.every_steps = every
-            mgr.maybe_save(step + 1, state)
-        if step % cfg.log_every == 0:
-            loss = float(jax.device_get(metrics["loss"]))
-            log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
-        metrics_hist.append({k: float(jax.device_get(v))
-                             for k, v in metrics.items()})
+    metrics_hist: list[dict] = []
+    pending: list[dict] = []    # device-array metric rows awaiting fetch
+
+    def _flush():
+        # one host sync for a whole window of rows, instead of one
+        # device_get per metric per step
+        if pending:
+            fetched = jax.device_get(pending)
+            del pending[:]
+            metrics_hist.extend(
+                {k: float(v) for k, v in row.items()} for row in fetched)
         if cfg.history_cap is not None and len(metrics_hist) > cfg.history_cap:
             del metrics_hist[:len(metrics_hist) - cfg.history_cap]
-        if stop["preempted"]:
-            if mgr:
-                mgr.maybe_save(step + 1, state, force=True)
-            log(f"[loop] preempted at step {step}; checkpointed and exiting")
-            break
-    if old is not None:
-        signal.signal(signal.SIGTERM, old)
+
+    step0 = int(jax.device_get(state.step))
+    stream = batches_fn(step0) if batches_fn else batches
+    step = step0
+    warm_until = step0 + 2
+    loss_ewma = None
+    spike_run = 0
+    rollbacks = 0
+    try:
+        while step < cfg.total_steps:
+            batch = next(stream)
+            t0 = time.time()
+            attempt = 0
+            while True:
+                try:
+                    if fault_hook is not None:
+                        fault_hook(step)
+                    # commit to the new state only after the sync point: under
+                    # async dispatch a device fault surfaces at block_until_ready,
+                    # and retries (and the crash checkpoint) must see the last
+                    # good state, not the failed step's poisoned buffers
+                    new_state, metrics = train_step(state, batch, cfg.seed)
+                    jax.block_until_ready(metrics["loss"])
+                    state = new_state
+                    break
+                except Exception as e:          # noqa: BLE001 — retry wall
+                    attempt += 1
+                    if attempt > cfg.max_retries_per_step:
+                        if mgr:
+                            mgr.maybe_save(step, state, force=True)
+                            log(f"[loop] step {step} failed {attempt}×; "
+                                f"checkpointed for external restart: {e}")
+                        raise
+                    log(f"[loop] step {step} retry {attempt} after {type(e).__name__}")
+            dt = time.time() - t0
+
+            if cfg.spike_factor is not None:
+                # the loss is already synced (block_until_ready above), so
+                # this per-step scalar fetch is cheap; identical on every
+                # process (the loss is a global collective mean), so the
+                # rollback decision is made in lockstep across hosts
+                loss_val = float(jax.device_get(metrics["loss"]))
+                spiked = (not math.isfinite(loss_val)
+                          or (loss_ewma is not None
+                              and loss_val > cfg.spike_factor * loss_ewma))
+                if spiked:
+                    spike_run += 1
+                else:
+                    spike_run = 0
+                    loss_ewma = (loss_val if loss_ewma is None
+                                 else 0.9 * loss_ewma + 0.1 * loss_val)
+                if spike_run >= cfg.spike_patience:
+                    if not mgr.has_checkpoint():
+                        raise RuntimeError(
+                            f"loss diverged at step {step} "
+                            f"(loss {loss_val:g}) with no checkpoint to "
+                            f"roll back to")
+                    if rollbacks >= cfg.max_rollbacks:
+                        # deliberately NOT checkpointed: LATEST must keep
+                        # naming the last good state, not the diverged one
+                        raise RuntimeError(
+                            f"loss diverged at step {step} after "
+                            f"{rollbacks} rollbacks; giving up")
+                    state, at = _restore(mgr, state, state_shardings, log)
+                    rollbacks += 1
+                    mgr.every_steps = cfg.ckpt_every * (
+                        cfg.rollback_widen ** rollbacks)
+                    log(f"[loop] loss spike at step {step} "
+                        f"(loss {loss_val:.4g}, ewma "
+                        f"{loss_ewma if loss_ewma is None else round(loss_ewma, 4)}); "
+                        f"rolled back to step {at}; "
+                        f"ckpt_every -> {mgr.every_steps}")
+                    _flush()
+                    step = at
+                    warm_until = at + 2
+                    loss_ewma, spike_run = None, 0
+                    stream = batches_fn(at)
+                    continue    # spiked state is never checkpointed/logged
+
+            # the first steps carry jit-compile time — keep them out of the
+            # EWMA or a 20 s compile masks every real straggler for hundreds
+            # of steps
+            dt_for_stats = None if step < warm_until else dt
+            straggling = (ewma is not None and dt_for_stats is not None
+                          and dt > cfg.straggler_factor * ewma)
+            if dt_for_stats is not None and not straggling:
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if straggling:
+                stragglers += 1
+                log(f"[loop] straggler: step {step} took {dt:.2f}s (ewma {ewma:.2f}s)")
+            if mgr and spike_run == 0:
+                # a step under spike suspicion (spiked, but patience not
+                # yet exhausted) is never committed — the rollback target
+                # must predate the first suspicious update
+                base = cfg.ckpt_every * (cfg.rollback_widen ** rollbacks)
+                if not multiproc:
+                    # cadence adaptation keys off *local* straggler
+                    # counts — under multi-host it must stay identical
+                    # across processes (snapshots are collective)
+                    mgr.every_steps = max(
+                        base // (2 if stragglers > 3 else 1), 1)
+                mgr.maybe_save(step + 1, state)
+            pending.append(metrics)
+            if step % cfg.log_every == 0:
+                _flush()
+                loss = metrics_hist[-1]["loss"] if metrics_hist else float("nan")
+                log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+            if _agree_preempted(stop["preempted"], multiproc):
+                if mgr:
+                    mgr.maybe_save(step + 1, state, force=True)
+                log(f"[loop] preempted at step {step}; checkpointed and exiting")
+                break
+            step += 1
+    except BaseException:
+        if mgr:
+            try:
+                mgr.drain()     # the crash checkpoint must hit disk
+            except Exception as e2:  # noqa: BLE001 — original error wins
+                log(f"[loop] checkpoint drain failed during unwind: {e2}")
+        raise
+    finally:
+        if old is not None:
+            signal.signal(signal.SIGTERM, old)
+    _flush()
+    if mgr:
+        mgr.drain()             # preemption/final saves committed before return
     return state, {"history": metrics_hist, "stragglers": stragglers,
-                   "preempted": stop["preempted"]}
+                   "preempted": stop["preempted"], "rollbacks": rollbacks}

@@ -33,11 +33,19 @@ def pytest_configure(config):
         "markers",
         "dist: multi-device / sharding tests (opt out with -m 'not dist'; "
         "in-process cases get 8 virtual CPU devices via -m dist)")
+    config.addinivalue_line(
+        "markers",
+        "multihost: N-process jax.distributed fault-tolerance tests "
+        "(subprocess-heavy; opt in with -m multihost)")
     markexpr = config.getoption("markexpr", "") or ""
     if "dist" in markexpr and "not dist" not in markexpr:
         os.environ["XLA_FLAGS"] = _DIST_XLA_FLAGS
     else:
         os.environ.pop("XLA_FLAGS", None)
+    if "multihost" in markexpr and "not multihost" not in markexpr:
+        # consumed by the skipif guard in test_multihost.py; the spawned
+        # ranks themselves are configured via REPRO_* by dist_launch
+        os.environ["REPRO_MULTIHOST_TESTS"] = "1"
 
 
 @pytest.fixture(scope="session")

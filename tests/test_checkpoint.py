@@ -1,7 +1,10 @@
-"""Checkpoint manager: atomicity, keep-N GC, resume, elastic reshard."""
+"""Checkpoint manager: atomicity, async commits, keep-N GC, resume,
+elastic reshard, crash-mid-commit recovery."""
 import json
 import os
+import shutil
 import threading
+import time
 from pathlib import Path
 
 import jax
@@ -85,23 +88,92 @@ class TestSaveRestore:
             C.restore(tmp_path, bad)
 
 
+def _age(path, secs=2 * C.TMP_STALE_SECS):
+    t = time.time() - secs
+    os.utime(path, (t, t))
+
+
 class TestAtomicity:
     def test_tmp_dirs_never_visible_as_checkpoints(self, tmp_path):
         C.save(tmp_path, 1, _tree())
-        # simulate a crashed writer
+        # simulate a writer that crashed long ago
         junk = tmp_path / "tmp.2.deadbeef"
         junk.mkdir()
         (junk / "arrays.npz").write_bytes(b"garbage")
+        _age(junk)
         assert C.latest_step(tmp_path) == 1
         got, step = C.restore(tmp_path, _tree())
         assert step == 1
-        # next save GCs the junk
+        # next save GCs the stale junk
         C.save(tmp_path, 3, _tree())
         assert not junk.exists()
 
-    def test_corrupt_latest_pointer_is_detected(self, tmp_path):
+    def test_gc_spares_recent_tmp_dirs(self, tmp_path):
+        """Regression: _gc used to rm-tree every tmp.* unconditionally,
+        racing any concurrent (async) writer. A *recent* tmp dir may be
+        another writer's in-flight commit — only stale ones are reaped."""
         C.save(tmp_path, 1, _tree())
+        fresh = tmp_path / "tmp.9.aaaa0000"
+        fresh.mkdir()
+        stale = tmp_path / "tmp.9.bbbb0000"
+        stale.mkdir()
+        _age(stale)
+        C.save(tmp_path, 2, _tree())
+        assert fresh.exists()          # could be an in-flight writer
+        assert not stale.exists()      # provably a crashed one
+
+    def test_gc_never_deletes_this_processes_inflight_tmp(self, tmp_path):
+        """Even a stale-looking tmp dir is spared while a live writer in
+        this process owns it (a commit can legitimately be slow)."""
+        C.save(tmp_path, 1, _tree())
+        mine = tmp_path / "tmp.7.cccc0000"
+        mine.mkdir()
+        _age(mine)
+        C._IN_FLIGHT.add(str(mine))
+        try:
+            C.save(tmp_path, 2, _tree())
+            assert mine.exists()
+        finally:
+            C._IN_FLIGHT.discard(str(mine))
+
+    def test_corrupt_latest_pointer_falls_back_and_repairs(self, tmp_path):
+        """Regression: a dangling LATEST (crash between the step-dir
+        rename and the LATEST rename) used to make latest_step return
+        None — has_checkpoint() reported no checkpoint despite valid
+        step dirs on disk. Now: fall back to the newest valid step dir
+        and repair the pointer."""
+        C.save(tmp_path, 1, _tree())
+        C.save(tmp_path, 2, _tree(2))
         (tmp_path / "LATEST").write_text("step_000009999")
+        assert C.latest_step(tmp_path) == 2
+        # pointer was repaired in passing
+        assert (tmp_path / "LATEST").read_text().strip() == "step_000000002"
+        got, step = C.restore(tmp_path, _tree())
+        assert step == 2
+
+    def test_missing_latest_pointer_falls_back(self, tmp_path):
+        C.save(tmp_path, 3, _tree())
+        (tmp_path / "LATEST").unlink()
+        assert C.latest_step(tmp_path) == 3
+        assert (tmp_path / "LATEST").exists()
+
+    def test_crash_between_rmtree_and_rename_recovers(self, tmp_path):
+        """Crash on an overwriting save after `rmtree(final)` but before
+        `os.replace(tmp, final)`: LATEST names a dir that no longer has
+        a manifest. Recovery falls back to the previous committed step."""
+        C.save(tmp_path, 1, _tree())
+        C.save(tmp_path, 2, _tree(2))
+        assert C.latest_step(tmp_path) == 2
+        shutil.rmtree(tmp_path / "step_000000002")   # LATEST now dangles
+        assert C.latest_step(tmp_path) == 1
+        got, step = C.restore(tmp_path, _tree())
+        assert step == 1
+
+    def test_no_valid_checkpoint_is_still_none(self, tmp_path):
+        tmp_path.mkdir(exist_ok=True)
+        (tmp_path / "LATEST").write_text("step_000000042")
+        bad = tmp_path / "step_000000042"
+        bad.mkdir()                                   # dir without manifest
         assert C.latest_step(tmp_path) is None
 
 
@@ -132,3 +204,75 @@ class TestManager:
         mgr = C.CheckpointManager(tmp_path, every_steps=1000)
         assert mgr.maybe_save(3, _tree(), force=True) is not None
         assert mgr.has_checkpoint()
+
+
+class TestAsync:
+    def test_async_save_commits_off_thread_and_roundtrips(self, tmp_path):
+        t = _tree()
+        with C.CheckpointManager(tmp_path, every_steps=1,
+                                 async_saves=True) as mgr:
+            assert mgr.maybe_save(5, t) is not None
+            mgr.drain()
+            assert C.latest_step(tmp_path) == 5
+            got, step = mgr.restore_latest(
+                jax.tree_util.tree_map(jnp.zeros_like, t))
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(got)):
+            assert a.dtype == b.dtype and bool(jnp.all(a == b))
+
+    def test_commits_happen_in_submission_order(self, tmp_path, monkeypatch):
+        """A step-N snapshot must never commit after a step-N+k one —
+        LATEST would travel backwards. Slow the writer down per-commit
+        and record the order commits actually land in."""
+        committed = []
+        real = C._commit
+
+        def slow_commit(directory, snap, keep_n):
+            time.sleep(0.05 if snap.step % 2 == 0 else 0.0)
+            committed.append(snap.step)
+            return real(directory, snap, keep_n)
+
+        monkeypatch.setattr(C, "_commit", slow_commit)
+        with C.CheckpointManager(tmp_path, every_steps=1, keep_n=10,
+                                 async_saves=True, max_pending=2) as mgr:
+            for s in range(1, 7):
+                mgr.maybe_save(s, _tree(s))
+            mgr.drain()
+        assert committed == [1, 2, 3, 4, 5, 6]
+        assert C.latest_step(tmp_path) == 6
+
+    def test_snapshot_is_taken_at_submit_time(self, tmp_path):
+        """The committed bytes are the state at maybe_save() time, even
+        if the caller mutates its arrays before the background write."""
+        arr = np.zeros(8, np.float32)
+        with C.CheckpointManager(tmp_path, every_steps=1,
+                                 async_saves=True) as mgr:
+            mgr.maybe_save(1, {"w": jnp.asarray(arr)})
+            arr += 1.0          # too late: snapshot already off-device
+            mgr.drain()
+        got, _ = C.restore(tmp_path, {"w": jnp.ones(8, np.float32)})
+        assert bool(jnp.all(got["w"] == 0.0))
+
+    def test_background_failure_surfaces_at_drain(self, tmp_path, monkeypatch):
+        def boom(directory, snap, keep_n):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(C, "_commit", boom)
+        mgr = C.CheckpointManager(tmp_path, every_steps=1, async_saves=True)
+        mgr.maybe_save(1, _tree())
+        with pytest.raises(RuntimeError, match="async checkpoint"):
+            mgr.drain()
+
+    def test_has_checkpoint_waits_for_pending_commits(self, tmp_path,
+                                                      monkeypatch):
+        real = C._commit
+
+        def slow(directory, snap, keep_n):
+            time.sleep(0.1)
+            return real(directory, snap, keep_n)
+
+        monkeypatch.setattr(C, "_commit", slow)
+        with C.CheckpointManager(tmp_path, every_steps=1,
+                                 async_saves=True) as mgr:
+            mgr.maybe_save(1, _tree())
+            assert mgr.has_checkpoint()   # drains first — no race

@@ -1,5 +1,8 @@
-"""Fault-tolerant loop: retry, resume-equality, preemption, stragglers."""
+"""Fault-tolerant loop: retry, resume-equality, preemption, stragglers,
+batch-stream resume offsets, batched metrics fetch, spike rollback."""
 import itertools
+import os
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +104,164 @@ def test_resume_is_exact(tmp_path):
     for a, c in zip(jax.tree_util.tree_leaves(full.params),
                     jax.tree_util.tree_leaves(resumed.params)):
         assert bool(jnp.all(a == c))
+
+
+def test_lm_batches_start_step_is_stream_suffix():
+    """The stream is step-keyed: start_step=k yields exactly the suffix
+    of the start_step=0 stream from batch k on."""
+    from repro.data.synthetic import lm_batches
+    full = lm_batches(CFG.vocab, 4, 16, seed=9)
+    for _ in range(5):
+        next(full)
+    tail = lm_batches(CFG.vocab, 4, 16, seed=9, start_step=5)
+    for _ in range(3):
+        a, b = next(full), next(tail)
+        assert bool(jnp.all(a["tokens"] == b["tokens"]))
+        assert bool(jnp.all(a["labels"] == b["labels"]))
+
+
+def test_resume_does_not_replay_batch_stream(tmp_path):
+    """Regression (launcher resume bug): rebuilding the stream from
+    scratch on resume re-trained the first step0 batches. With callable
+    batches the loop requests the stream *at the restored step*, and the
+    pre-/post-resume batches form one non-overlapping sequence."""
+    starts = []
+    consumed = []
+
+    def factory(start_step):
+        starts.append(start_step)
+
+        def gen():
+            b = lm_batches(CFG.vocab, 4, 16, seed=9, start_step=start_step)
+            i = start_step
+            while True:
+                consumed.append(i)
+                yield next(b)
+                i += 1
+        return gen()
+
+    state, step = _setup()
+    half, _ = run_training(state, step, factory,
+                           TrainLoopConfig(total_steps=5,
+                                           ckpt_dir=str(tmp_path),
+                                           ckpt_every=5),
+                           log=lambda *_: None)
+    # fresh state: the loop restores step 5 and must ask for the stream
+    # at step 5, not replay batches 0..4
+    state2, _ = _setup()
+    resumed, _ = run_training(state2, step, factory,
+                              TrainLoopConfig(total_steps=10,
+                                              ckpt_dir=str(tmp_path),
+                                              ckpt_every=1000),
+                              log=lambda *_: None)
+    assert starts == [0, 5]
+    assert consumed == list(range(10))        # one non-overlapping sequence
+
+    # and the result equals an uninterrupted 10-step run, bit-for-bit
+    state3, _ = _setup()
+    full, _ = run_training(state3, step,
+                           lm_batches(CFG.vocab, 4, 16, seed=9),
+                           TrainLoopConfig(total_steps=10),
+                           log=lambda *_: None)
+    for a, c in zip(jax.tree_util.tree_leaves(full.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        assert bool(jnp.all(a == c))
+
+
+def test_metrics_fetched_in_batches_not_per_step(monkeypatch):
+    """Regression: the loop used to float(device_get(v)) every metric
+    every step, serializing dispatch. Metrics now stay on device and are
+    materialized at log_every cadence / loop exit."""
+    from repro.train import loop as LP
+    from repro.train.train_state import TrainState
+
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(LP.jax, "device_get", counting)
+
+    def step_fn(state, batch, seed):
+        m = {"loss": jnp.float32(1.0), "gnorm": jnp.float32(2.0),
+             "lr": jnp.float32(3e-4), "scale": jnp.float32(1.0)}
+        return state._replace(step=state.step + 1), m
+
+    state = TrainState(jnp.int32(0), {"w": jnp.zeros(4)}, {}, None)
+    _, info = LP.run_training(state, step_fn, itertools.repeat({}),
+                              TrainLoopConfig(total_steps=40, log_every=10),
+                              log=lambda *_: None)
+    assert len(info["history"]) == 40
+    assert all(isinstance(v, float) for v in info["history"][-1].values())
+    # 40 steps × 4 metrics = 160 per-step fetches before the fix; now one
+    # device_get per flush window (+ the step-0 read)
+    assert calls["n"] <= 10, calls["n"]
+
+
+def test_spike_rollback_restores_and_widens_cadence(tmp_path):
+    from repro.train.train_state import TrainState
+
+    rolled = {"done": False}
+    starts = []
+
+    def step_fn(state, batch, seed):
+        s = int(state.step)
+        loss = 1.0 + 0.001 * s
+        if s in (7, 8) and not rolled["done"]:
+            loss = 1e9                        # two-step divergence
+        return (state._replace(step=state.step + 1),
+                {"loss": jnp.float32(loss)})
+
+    def factory(start_step):
+        starts.append(start_step)
+        if starts.count(start_step) > 1 or start_step > 0:
+            rolled["done"] = True             # post-rollback stream
+        return itertools.repeat({})
+
+    logs = []
+    state = TrainState(jnp.int32(0), {"w": jnp.zeros(4)}, {}, None)
+    out, info = run_training(
+        state, step_fn, factory,
+        TrainLoopConfig(total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=2,
+                        spike_factor=4.0, spike_patience=2, log_every=100),
+        log=logs.append)
+    assert info["rollbacks"] == 1
+    assert int(jax.device_get(out.step)) == 12
+    assert starts[0] == 0 and len(starts) == 2 and 0 < starts[1] <= 8
+    assert any("rolled back to step" in l for l in logs), logs
+    assert any("ckpt_every -> 4" in l for l in logs), logs
+    # the spiked state was never committed: every history row is sane
+    assert all(m["loss"] < 10.0 for m in info["history"][-4:])
+
+
+def test_spike_monitor_requires_rollback_target():
+    state, step = _setup()
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        run_training(state, step, lambda s: iter([]),
+                     TrainLoopConfig(total_steps=1, spike_factor=3.0),
+                     log=lambda *_: None)
+
+
+def test_sigterm_preemption_checkpoints_with_async_saves(tmp_path):
+    """Preemption under async checkpointing: the forced save is queued on
+    the writer thread, and the loop drains before returning — LATEST is
+    committed by the time run_training hands back control."""
+    state, step = _setup()
+
+    def fault_hook(s):
+        if s == 3:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    state, info = run_training(
+        state, step, lm_batches(CFG.vocab, 4, 16),
+        TrainLoopConfig(total_steps=50, ckpt_dir=str(tmp_path),
+                        ckpt_every=1000, async_saves=True),
+        log=lambda *_: None, fault_hook=fault_hook)
+    assert info["preempted"]
+    from repro.train import checkpoint as C
+    assert C.latest_step(tmp_path) == 4       # step 3 ran, then exit
 
 
 def test_straggler_detection():
