@@ -44,8 +44,10 @@ def initialize(coordinator: str | None = None,
 
     Arguments default to the ``REPRO_*`` environment variables; with
     neither flags nor env set (or ``num_processes <= 1``) this is a
-    no-op returning False — the single-process path. Must run before
-    the first device/backend use in the process.
+    no-op returning False — the single-process path. A partial triple
+    (coordinator + num_processes but no rank) raises ``ValueError``
+    naming the missing flag/env var. Must run before the first
+    device/backend use in the process.
     """
     global _initialized
     if _initialized:
@@ -57,6 +59,14 @@ def initialize(coordinator: str | None = None,
         process_id = int(os.environ[ENV_PROCESS_ID])
     if not coordinator or not num_processes or num_processes <= 1:
         return False
+    if process_id is None:
+        # jax.distributed.initialize(process_id=None) only works inside
+        # auto-detecting cluster environments; anywhere else it dies
+        # with an opaque backend error. Fail early and name the knob.
+        raise ValueError(
+            "multihost.initialize: coordinator and num_processes are set "
+            "but process_id is not — pass process_id= (--process-id) or "
+            f"set {ENV_PROCESS_ID}")
     try:
         # the CPU client ships cross-process collectives only via gloo;
         # harmless when another backend ends up selected

@@ -97,6 +97,9 @@ def main():
                          "steps with loss > factor × EWMA (or non-finite)")
     ap.add_argument("--spike-patience", type=int, default=2)
     ap.add_argument("--max-rollbacks", type=int, default=2)
+    ap.add_argument("--preempt-poll", type=int, default=10,
+                    help="multi-host: poll the (collective) SIGTERM "
+                         "agreement every this many steps")
     args = ap.parse_args()
 
     # must precede any backend/device use in the process
@@ -163,7 +166,8 @@ def _run(state, step_fn, cfg, args, state_shardings=None):
                         async_saves=not args.sync_ckpt,
                         spike_factor=args.spike_factor,
                         spike_patience=args.spike_patience,
-                        max_rollbacks=args.max_rollbacks),
+                        max_rollbacks=args.max_rollbacks,
+                        preempt_poll_every=args.preempt_poll),
         log=log, state_shardings=state_shardings)
     last = info["history"][-1] if info["history"] else {}
     log(f"[train] done at step {int(jax.device_get(state.step))}; "

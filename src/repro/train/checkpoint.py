@@ -83,6 +83,12 @@ def _leaf_to_host(x) -> np.ndarray:
         from jax.experimental import multihost_utils
         x = multihost_utils.process_allgather(x, tiled=True)
     arr = np.asarray(jax.device_get(x))
+    if not arr.flags.writeable or not arr.flags.owndata:
+        # device_get on CPU can return a zero-copy view of the live
+        # buffer (which itself may alias a caller's numpy array, when
+        # alignment allowed zero-copy device_put). A snapshot must be
+        # immutable — own the bytes.
+        arr = arr.copy()
     return arr
 
 
@@ -421,9 +427,14 @@ class CheckpointManager:
         self.close()
         return False
 
-    def restore_latest(self, like: PyTree, shardings=None, skip=None):
+    def restore_latest(self, like: PyTree, shardings=None, skip=None,
+                       step: int | None = None):
+        """Restore the newest checkpoint — or, with ``step``, exactly
+        that one (multi-host callers pass a cross-host agreed step so
+        every process restores identically; see ``loop._agreed_restore_step``)."""
         self.drain()
-        return restore(self.directory, like, shardings=shardings, skip=skip)
+        return restore(self.directory, like, step=step,
+                       shardings=shardings, skip=skip)
 
     def has_checkpoint(self) -> bool:
         self.drain()

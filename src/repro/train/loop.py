@@ -23,7 +23,11 @@ Wraps the jitted train step with the machinery a 1000-node run needs:
 Under ``jax.distributed`` (one process per host — see
 :mod:`repro.dist.multihost`) the loop is collective: every process runs
 it in lockstep, checkpoint snapshots gather across hosts, only process
-0 writes, and all processes barrier around restore.
+0 writes, and all processes barrier around restore. The restore step —
+at startup and on spike rollback — is agreed via a process-0 broadcast
+(only process 0 has queued async commits that can move LATEST), and
+the SIGTERM agreement is polled every ``preempt_poll_every`` steps
+rather than per step.
 """
 from __future__ import annotations
 
@@ -36,7 +40,7 @@ from typing import Any, Callable, Iterator, Union
 
 import jax
 
-from repro.train.checkpoint import CheckpointManager, manifest
+from repro.train.checkpoint import CheckpointManager, latest_step, manifest
 from repro.train.train_state import TrainState
 
 __all__ = ["TrainLoopConfig", "run_training"]
@@ -71,7 +75,34 @@ def _agree_preempted(local: bool, multiproc: bool) -> bool:
     return bool(np.max(flags) > 0)
 
 
-def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
+def _agreed_restore_step(mgr: CheckpointManager,
+                         multiproc: bool) -> int | None:
+    """The step every process will restore, agreed across hosts
+    (None when no checkpoint exists).
+
+    Process 0 is the only process that ever has queued async commits:
+    its ``drain()`` can move LATEST forward while a peer's (no-op)
+    drain leaves the peer still reading the pre-commit pointer — each
+    host picking its own ``latest_step`` can therefore pick *different*
+    steps and silently diverge after restore. So only process 0 reads
+    LATEST, after draining, and broadcasts the result: the collective
+    completing on any host implies process 0's commits already hit the
+    (shared) filesystem, and every host restores the same step."""
+    mgr.drain()              # flush queued commits (no-op off-primary)
+    if not multiproc:
+        return latest_step(mgr.directory)
+    import numpy as np
+    from jax.experimental import multihost_utils
+    local = -1
+    if jax.process_index() == 0:
+        found = latest_step(mgr.directory)
+        local = -1 if found is None else found
+    step = int(multihost_utils.broadcast_one_to_all(np.int64(local)))
+    return None if step < 0 else step
+
+
+def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log,
+             *, step: int | None = None):
     """Elastic restore, tolerant of gradient-wire residual layout drift
     in every direction a restart can change the wire:
 
@@ -90,11 +121,15 @@ def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
     change, which also shifts the count by one param-shaped tree —
     falls through to ``checkpoint.restore``'s own clear validation
     error instead of being misdiagnosed as residual drift.
+
+    ``step`` pins the checkpoint to restore (multi-host passes the
+    cross-host agreed step — see :func:`_agreed_restore_step`); None
+    restores whatever LATEST names.
     """
     residuals = getattr(state, "wire_residuals", None)
     n_state = len(jax.tree_util.tree_leaves(state))
     n_params = len(jax.tree_util.tree_leaves(state.params))
-    man = manifest(mgr.directory)
+    man = manifest(mgr.directory, step=step)
     n_ckpt = man["n_leaves"]
     none_like = lambda tree: jax.tree_util.tree_map(lambda _: None, tree)  # noqa: E731
     stored_as = lambda tree: man.get("treedef") == str(  # noqa: E731
@@ -111,7 +146,8 @@ def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
         if n_ckpt == n_bare and man.get("treedef") in accepted:
             bare_sh = (state_shardings._replace(wire_residuals=None)
                        if state_shardings is not None else None)
-            restored, at = mgr.restore_latest(bare, shardings=bare_sh)
+            restored, at = mgr.restore_latest(bare, shardings=bare_sh,
+                                              step=step)
             log("[loop] checkpoint has no wire_residuals; zero-initialized "
                 "error-feedback buffers")
             return restored._replace(wire_residuals=residuals), at
@@ -121,7 +157,7 @@ def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
             sh = (state_shardings._replace(wire_residuals=none_like(residuals))
                   if state_shardings is not None else None)
             restored, at = mgr.restore_latest(
-                state, shardings=sh, skip=range(n_bare, n_state))
+                state, shardings=sh, skip=range(n_bare, n_state), step=step)
             log("[loop] wire replica count changed since checkpoint; "
                 "zero-initialized error-feedback buffers")
             return restored._replace(wire_residuals=residuals), at
@@ -135,11 +171,11 @@ def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log):
                       wire_residuals=none_like(state.params))
                   if state_shardings is not None else None)
             restored, at = mgr.restore_latest(
-                like, shardings=sh, skip=range(n_state, n_ckpt))
+                like, shardings=sh, skip=range(n_state, n_ckpt), step=step)
             log("[loop] dropping checkpointed wire_residuals (stateless "
                 "gradient transport)")
             return restored._replace(wire_residuals=None), at
-    return mgr.restore_latest(state, shardings=state_shardings)
+    return mgr.restore_latest(state, shardings=state_shardings, step=step)
 
 
 @dataclasses.dataclass
@@ -171,6 +207,13 @@ class TrainLoopConfig:
     spike_patience: int = 2
     max_rollbacks: int = 2
     rollback_widen: int = 2
+    # Multi-host only: the SIGTERM agreement is a cross-host allgather,
+    # so it is polled every this many steps instead of every step (a
+    # per-step collective would negate the batched-metrics win). A
+    # host's signal is therefore acted on within preempt_poll_every
+    # steps — keep it small relative to the preemption grace period.
+    # Single-process runs still react on the very next step boundary.
+    preempt_poll_every: int = 10
 
 
 def run_training(state: TrainState, train_step: Callable, batches: Batches,
@@ -216,11 +259,14 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
         # any of them decides to restore (primary may still be
         # committing from a previous incarnation on a shared FS)
         _barrier("repro:loop:start")
-    if mgr and mgr.has_checkpoint():
-        state, at = _restore(mgr, state, state_shardings, log)
-        log(f"[loop] resumed from checkpoint at step {at}")
-        if multiproc:
-            _barrier("repro:loop:restored")
+    if mgr:
+        at_step = _agreed_restore_step(mgr, multiproc)
+        if at_step is not None:
+            state, at = _restore(mgr, state, state_shardings, log,
+                                 step=at_step)
+            log(f"[loop] resumed from checkpoint at step {at}")
+            if multiproc:
+                _barrier("repro:loop:restored")
 
     stop = {"preempted": False}
 
@@ -236,6 +282,7 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
     stragglers = 0
     metrics_hist: list[dict] = []
     pending: list[dict] = []    # device-array metric rows awaiting fetch
+    suspect: list[dict] = []    # rows from steps under spike suspicion
 
     def _flush():
         # one host sync for a whole window of rows, instead of one
@@ -275,10 +322,20 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                 except Exception as e:          # noqa: BLE001 — retry wall
                     attempt += 1
                     if attempt > cfg.max_retries_per_step:
-                        if mgr:
+                        if mgr and not multiproc:
                             mgr.maybe_save(step, state, force=True)
                             log(f"[loop] step {step} failed {attempt}×; "
                                 f"checkpointed for external restart: {e}")
+                        elif multiproc:
+                            # the crash save's snapshot is collective and
+                            # the peers never reach this branch — saving
+                            # here would wedge every host in a dead
+                            # allgather until the backend times out.
+                            # Just raise; the launcher restarts the run
+                            # from the last committed checkpoint.
+                            log(f"[loop] step {step} failed {attempt}×; "
+                                f"raising for cluster restart from the "
+                                f"last committed checkpoint: {e}")
                         raise
                     log(f"[loop] step {step} retry {attempt} after {type(e).__name__}")
             dt = time.time() - t0
@@ -299,7 +356,12 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                     loss_ewma = (loss_val if loss_ewma is None
                                  else 0.9 * loss_ewma + 0.1 * loss_val)
                 if spike_run >= cfg.spike_patience:
-                    if not mgr.has_checkpoint():
+                    # all processes reach this point at the same step
+                    # (the loss is a global mean); the restore step is
+                    # still agreed via process 0 so a pending async
+                    # commit can't land between two hosts' LATEST reads
+                    at_step = _agreed_restore_step(mgr, multiproc)
+                    if at_step is None:
                         raise RuntimeError(
                             f"loss diverged at step {step} "
                             f"(loss {loss_val:g}) with no checkpoint to "
@@ -310,7 +372,10 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                         raise RuntimeError(
                             f"loss diverged at step {step} after "
                             f"{rollbacks} rollbacks; giving up")
-                    state, at = _restore(mgr, state, state_shardings, log)
+                    state, at = _restore(mgr, state, state_shardings, log,
+                                         step=at_step)
+                    if multiproc:
+                        _barrier("repro:loop:rolled-back")
                     rollbacks += 1
                     mgr.every_steps = cfg.ckpt_every * (
                         cfg.rollback_widen ** rollbacks)
@@ -320,6 +385,7 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                         f"rolled back to step {at}; "
                         f"ckpt_every -> {mgr.every_steps}")
                     _flush()
+                    suspect.clear()   # rows from the discarded trajectory
                     step = at
                     warm_until = at + 2
                     loss_ewma, spike_run = None, 0
@@ -349,12 +415,28 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                     mgr.every_steps = max(
                         base // (2 if stragglers > 3 else 1), 1)
                 mgr.maybe_save(step + 1, state)
-            pending.append(metrics)
+            if spike_run > 0:
+                # quarantine: if the run rolls back, the trajectory this
+                # row measured is discarded — it must not reach history
+                suspect.append(metrics)
+            else:
+                if suspect:
+                    # suspicion cleared without a rollback: those steps'
+                    # updates were kept, so their rows are real history
+                    pending.extend(suspect)
+                    suspect.clear()
+                pending.append(metrics)
             if step % cfg.log_every == 0:
                 _flush()
                 loss = metrics_hist[-1]["loss"] if metrics_hist else float("nan")
                 log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
-            if _agree_preempted(stop["preempted"], multiproc):
+            # the cross-host agreement is a collective, so under
+            # multi-host it runs on a fixed step schedule (every process
+            # must enter it at the same steps) instead of every step;
+            # single-process keeps per-step responsiveness for free
+            poll = (not multiproc
+                    or step % max(cfg.preempt_poll_every, 1) == 0)
+            if poll and _agree_preempted(stop["preempted"], multiproc):
                 if mgr:
                     mgr.maybe_save(step + 1, state, force=True)
                 log(f"[loop] preempted at step {step}; checkpointed and exiting")
@@ -370,6 +452,12 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
     finally:
         if old is not None:
             signal.signal(signal.SIGTERM, old)
+    if suspect:
+        # the run ended while still under (unresolved) spike suspicion;
+        # those steps' updates are in the returned state, so their rows
+        # are part of the realized trajectory
+        pending.extend(suspect)
+        suspect.clear()
     _flush()
     if mgr:
         mgr.drain()             # preemption/final saves committed before return

@@ -205,6 +205,22 @@ class TestManager:
         assert mgr.maybe_save(3, _tree(), force=True) is not None
         assert mgr.has_checkpoint()
 
+    def test_restore_latest_explicit_step(self, tmp_path):
+        """`step=` pins the checkpoint instead of whatever LATEST names —
+        the multi-host restore path passes a cross-host agreed step."""
+        mgr = C.CheckpointManager(tmp_path, every_steps=1000, keep_n=5)
+        mgr.maybe_save(3, _tree(3), force=True)
+        mgr.maybe_save(7, _tree(7), force=True)
+        like = jax.tree_util.tree_map(jnp.zeros_like, _tree())
+        got, step = mgr.restore_latest(like, step=3)
+        assert step == 3
+        ref = _tree(3)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(ref)):
+            assert bool(jnp.all(a == b))
+        _, newest = mgr.restore_latest(like)
+        assert newest == 7
+
 
 class TestAsync:
     def test_async_save_commits_off_thread_and_roundtrips(self, tmp_path):

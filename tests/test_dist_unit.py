@@ -213,6 +213,37 @@ class TestBatchCacheSpecs:
 
 
 # ---------------------------------------------------------------------------
+# multihost initialize: configuration validation (no cluster needed)
+# ---------------------------------------------------------------------------
+
+class TestMultihostInit:
+    def _clear_env(self, monkeypatch):
+        from repro.dist import multihost as MH
+        for k in (MH.ENV_COORDINATOR, MH.ENV_NUM_PROCESSES,
+                  MH.ENV_PROCESS_ID):
+            monkeypatch.delenv(k, raising=False)
+        return MH
+
+    def test_noop_when_unconfigured(self, monkeypatch):
+        MH = self._clear_env(monkeypatch)
+        assert MH.initialize() is False
+
+    def test_noop_single_process(self, monkeypatch):
+        MH = self._clear_env(monkeypatch)
+        assert MH.initialize(coordinator="127.0.0.1:9",
+                             num_processes=1) is False
+
+    def test_missing_process_id_raises_clearly(self, monkeypatch):
+        """Regression: coordinator + num_processes without a rank fell
+        through to jax.distributed.initialize(process_id=None), which
+        dies with an opaque backend error outside auto-detecting cluster
+        environments. Now a ValueError names the missing flag/env var."""
+        MH = self._clear_env(monkeypatch)
+        with pytest.raises(ValueError, match="REPRO_PROCESS_ID"):
+            MH.initialize(coordinator="127.0.0.1:9", num_processes=2)
+
+
+# ---------------------------------------------------------------------------
 # real placement on 8 virtual devices (in-process; runs under `-m dist`)
 # ---------------------------------------------------------------------------
 

@@ -236,6 +236,169 @@ def test_spike_rollback_restores_and_widens_cadence(tmp_path):
     assert all(m["loss"] < 10.0 for m in info["history"][-4:])
 
 
+def test_spike_suspect_rows_never_reach_history_on_rollback(tmp_path):
+    """Regression: a spiked step under patience appended its metric row
+    to the pending buffer, so after the rollback discarded that
+    trajectory the row (and the spiked loss) still surfaced in
+    ``history``. Suspicious rows are now quarantined and dropped on
+    rollback — history holds exactly the realized trajectory's rows."""
+    import itertools as it
+
+    from repro.train.train_state import TrainState
+
+    rolled = {"done": False}
+
+    def step_fn(state, batch, seed):
+        s = int(state.step)
+        loss = 1.0 + 0.001 * s
+        if s in (7, 8) and not rolled["done"]:
+            loss = 1e9                        # two-step divergence
+        return (state._replace(step=state.step + 1),
+                {"loss": jnp.float32(loss)})
+
+    def factory(start_step):
+        if start_step > 0:
+            rolled["done"] = True             # post-rollback stream
+        return it.repeat({})
+
+    state = TrainState(jnp.int32(0), {"w": jnp.zeros(4)}, {}, None)
+    out, info = run_training(
+        state, step_fn, factory,
+        TrainLoopConfig(total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=2,
+                        spike_factor=4.0, spike_patience=2, log_every=3),
+        log=lambda *_: None)
+    assert info["rollbacks"] == 1
+    # no row from the discarded trajectory: step 7's 1e9 loss was
+    # quarantined while under suspicion and dropped at the rollback
+    assert all(m["loss"] < 1e6 for m in info["history"]), info["history"]
+    # steps 0..6 ran once, steps 6..11 re-ran after the rollback
+    assert len(info["history"]) == 13
+
+
+def test_spike_under_patience_rows_merge_back_when_cleared(tmp_path):
+    """A suspicious step that recovers (patience not exhausted) keeps
+    its update, so its quarantined row merges back into history in
+    order — including a run that *ends* while still under suspicion."""
+    from repro.train.train_state import TrainState
+
+    def step_fn(state, batch, seed):
+        s = int(state.step)
+        loss = 1e9 if s in (5, 9) else 1.0    # isolated one-step spikes
+        return (state._replace(step=state.step + 1),
+                {"loss": jnp.float32(loss)})
+
+    state = TrainState(jnp.int32(0), {"w": jnp.zeros(4)}, {}, None)
+    out, info = run_training(
+        state, step_fn, lambda s: itertools.repeat({}),
+        TrainLoopConfig(total_steps=10, ckpt_dir=str(tmp_path), ckpt_every=3,
+                        spike_factor=4.0, spike_patience=2, log_every=100),
+        log=lambda *_: None)
+    assert info["rollbacks"] == 0
+    assert len(info["history"]) == 10
+    # in order: row 5 merged back when step 6 cleared suspicion; row 9
+    # (run ended under suspicion, update kept) merged at exit
+    assert info["history"][5]["loss"] >= 1e6
+    assert info["history"][9]["loss"] >= 1e6
+    assert all(info["history"][i]["loss"] < 1e6
+               for i in range(10) if i not in (5, 9))
+
+
+class _TwoProcessJax:
+    """Stand-in for the ``jax`` module inside ``repro.train.loop`` that
+    reports a 2-process cluster; everything else delegates to real jax.
+    Collective helpers (`_barrier`/`_agree_preempted`/
+    `_agreed_restore_step`) are stubbed separately by each test — the
+    unit under test is the loop's multi-host *branching*, not gloo."""
+
+    process_count = staticmethod(lambda: 2)
+
+    def __getattr__(self, name):
+        return getattr(jax, name)
+
+
+def test_multiproc_retry_exhaustion_skips_collective_crash_save(
+        tmp_path, monkeypatch):
+    """Regression: the retry-exhaustion crash checkpoint calls
+    ``maybe_save(force=True)``, whose snapshot is collective — but only
+    the failing process reaches it, so under multi-host it wedged every
+    peer in a dead allgather. Multi-host now just raises (the launcher
+    restarts from the last committed checkpoint)."""
+    from repro.train import checkpoint as C
+    from repro.train import loop as LP
+    from repro.train.train_state import TrainState
+
+    monkeypatch.setattr(LP, "jax", _TwoProcessJax())
+    monkeypatch.setattr(LP, "_barrier", lambda tag: None)
+    monkeypatch.setattr(LP, "_agree_preempted", lambda local, mp: local)
+    monkeypatch.setattr(LP, "_agreed_restore_step", lambda mgr, mp: None)
+
+    def step_fn(state, batch, seed):
+        return state._replace(step=state.step + 1), {"loss": jnp.float32(1.0)}
+
+    def always_fail(s):
+        if s == 2:
+            raise RuntimeError("permanent")
+
+    state = TrainState(jnp.int32(0), {"w": jnp.zeros(4)}, {}, None)
+    with pytest.raises(RuntimeError, match="permanent"):
+        LP.run_training(state, step_fn, itertools.repeat({}),
+                        TrainLoopConfig(total_steps=6, ckpt_dir=str(tmp_path),
+                                        ckpt_every=100, max_retries_per_step=1),
+                        log=lambda *_: None, fault_hook=always_fail)
+    # no crash checkpoint: the save's snapshot would never complete
+    # (its allgather has no peers), so multi-host must not attempt it
+    assert C.latest_step(tmp_path) is None
+
+
+def test_preemption_agreement_poll_cadence(monkeypatch):
+    """Under multi-host the SIGTERM agreement is a cross-host collective;
+    it is polled every ``preempt_poll_every`` steps instead of per step
+    (which would reintroduce a per-step host sync). Single-process keeps
+    checking its local flag every step."""
+    from repro.train import loop as LP
+    from repro.train.train_state import TrainState
+
+    calls = {"n": 0}
+
+    def counting_agree(local, mp):
+        calls["n"] += 1
+        return local
+
+    monkeypatch.setattr(LP, "_agree_preempted", counting_agree)
+
+    def step_fn(state, batch, seed):
+        return state._replace(step=state.step + 1), {"loss": jnp.float32(1.0)}
+
+    def run():
+        state = TrainState(jnp.int32(0), {"w": jnp.zeros(4)}, {}, None)
+        LP.run_training(state, step_fn, itertools.repeat({}),
+                        TrainLoopConfig(total_steps=40, log_every=100,
+                                        preempt_poll_every=10),
+                        log=lambda *_: None)
+
+    run()                                     # single-process: every step
+    assert calls["n"] == 40
+
+    calls["n"] = 0
+    monkeypatch.setattr(LP, "jax", _TwoProcessJax())
+    monkeypatch.setattr(LP, "_barrier", lambda tag: None)
+    run()                                     # multi-host: steps 0,10,20,30
+    assert calls["n"] == 4
+
+
+def test_agreed_restore_step_drains_pending_commits(tmp_path):
+    """Single-process semantics of the agreed-restore-step helper: the
+    async writer is drained before LATEST is read, so a just-submitted
+    snapshot is always visible to the rollback/startup restore."""
+    from repro.train import loop as LP
+    from repro.train.checkpoint import CheckpointManager
+
+    with CheckpointManager(tmp_path, async_saves=True) as mgr:
+        assert LP._agreed_restore_step(mgr, False) is None
+        mgr.maybe_save(3, {"w": jnp.arange(4.0)}, force=True)
+        assert LP._agreed_restore_step(mgr, False) == 3
+
+
 def test_spike_monitor_requires_rollback_target():
     state, step = _setup()
     with pytest.raises(ValueError, match="ckpt_dir"):

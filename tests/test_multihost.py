@@ -101,6 +101,19 @@ def test_two_process_training_commits_from_process_zero(tmp_path):
     # process-0 semantics: the non-primary rank is silent
     assert "[train] done" not in r1 and "[loop]" not in r1
 
+    # resume under the same 2-process topology: the restore step is
+    # agreed via a process-0 broadcast (only process 0 drains async
+    # commits), so both ranks must restore the same step
+    cmd2 = TRAIN + ["--steps", "9", "--ckpt-dir", str(ck),
+                    "--ckpt-every", "3"]
+    procs = DL.launch(cmd2, 2, log_dir=tmp_path / "logs2")
+    codes = DL.wait(procs, timeout=900)
+    r0, r1 = _logs(tmp_path / "logs2")
+    assert codes == [0, 0], (r0[-2000:], r1[-2000:])
+    assert "resumed from checkpoint at step 6" in r0
+    assert "[train] done at step 9" in r0
+    assert C.latest_step(ck) == 9
+
 
 def test_host_death_then_elastic_resume_on_shrunk_mesh(tmp_path):
     """Kill one of two hosts mid-run (SIGKILL — no goodbye), then resume
