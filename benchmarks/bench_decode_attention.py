@@ -1,0 +1,75 @@
+"""Fused vs generic decode attention over the slotted KV pool.
+
+Wall-times one decode step of attention (the serve hot loop's inner op)
+through the generic layer stack vs the fused Pallas kernel, and models
+the HBM traffic each pays. The fused kernel's in-kernel lane masking is
+the headline: a parked lane never touches its KV block, so pool traffic
+scales with *active* lanes — the generic path reads the whole pool and
+masks afterwards. (Interpret-mode wall times on CPU are directional
+only; the derived byte model is the portable number.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import QArith, get_policy
+from repro.kernels.decode_attention import fused_decode_attention
+from repro.models.layers import decode_attention
+
+B, SC, HKV, GROUP, D = 8, 64, 2, 4, 32
+HQ = HKV * GROUP
+
+
+def _traffic(active_lanes: int, fused: bool) -> int:
+    """HBM byte model per step (bf16 KV/q/out, f32 score rows)."""
+    kv = 2 * SC * HKV * D * 2                 # read K + V, bf16
+    q_out = HQ * D * 2 * 2                    # read q, write out
+    scores = HQ * SC * 4 * 2 * 2              # s write+read, p write+read (f32)
+    if fused:
+        return active_lanes * (kv + q_out)    # one pass, scores stay in VMEM
+    return B * (kv + q_out + scores)          # full pool + materialized rows
+
+
+def run() -> None:
+    policy = get_policy("bf16_standard")
+    qa = QArith(policy)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, 1, HQ, D), jnp.float32).astype(jnp.bfloat16)
+    k_cache = jax.random.normal(ks[1], (B, SC, HKV, D), jnp.float32).astype(jnp.bfloat16)
+    v_cache = jax.random.normal(ks[2], (B, SC, HKV, D), jnp.float32).astype(jnp.bfloat16)
+    k_pos = jnp.broadcast_to(jnp.arange(SC, dtype=jnp.int32), (B, SC))
+    q_pos_all = jnp.full((B,), SC - 1, jnp.int32)
+    q_pos_half = q_pos_all.at[B // 2:].set(-1)     # park half the lanes
+
+    generic = jax.jit(lambda qq, kc, vc, kp, qp:
+                      decode_attention(qa, qq, kc, vc, kp, q_pos=qp))
+
+    def _fused(qq, kc, vc, kp, qp):
+        return fused_decode_attention(qq, kc, vc, kp, qp)
+
+    fused = jax.jit(_fused)
+
+    us = time_fn(generic, q, k_cache, v_cache, k_pos, q_pos_all, iters=10)
+    row("decode_attn_generic", us, _traffic(B, fused=False))
+    us = time_fn(fused, q, k_cache, v_cache, k_pos, q_pos_all, iters=10)
+    row("decode_attn_fused", us, _traffic(B, fused=True))
+    us = time_fn(fused, q, k_cache, v_cache, k_pos, q_pos_half, iters=10)
+    row("decode_attn_fused_half_parked", us, _traffic(B // 2, fused=True))
+
+    full = _traffic(B, fused=False)
+    fusd = _traffic(B, fused=True)
+    row("decode_attn_bytes_ratio", 0.0, f"{full / fusd:.2f}x")
+
+    # parity spot-check rides the bench: fused ≡ generic, parked lanes zero
+    a = jax.device_get(generic(q, k_cache, v_cache, k_pos, q_pos_all))
+    b = jax.device_get(qa.cast(fused(q, k_cache, v_cache, k_pos, q_pos_all)))
+    assert (a == b).all(), "fused decode diverged from the generic path"
+    h = jax.device_get(fused(q, k_cache, v_cache, k_pos, q_pos_half))
+    assert (h[B // 2:] == 0).all(), "parked lanes must write zeros"
+
+
+if __name__ == "__main__":
+    run()

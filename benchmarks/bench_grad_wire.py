@@ -20,6 +20,14 @@ to 1 device):
 * ``grad_wire_pod_bytes_ratio`` — fp32 ÷ compressed wire bytes on the
   2-pod mesh; the acceptance bar is ≥ ~2×.
 
+Each step row is additionally labeled with the number of
+reduce-scatter→all-reduce+slice fallback sites found in the *optimized*
+module (``rs_fallbacks=N(ar+slice,…B)``, via
+:func:`repro.launch.hlo_analysis.analyze_hlo`): those are the sites
+where post-opt byte accounting would over-count by the shard factor,
+i.e. the reason this bench reads the pre-partitioning module for wire
+bytes in the first place.
+
 ``python benchmarks/bench_grad_wire.py --smoke`` runs the 2-pod pair
 only (the CI smoke).
 """
@@ -41,6 +49,7 @@ _SCRIPT = """
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import get_policy
     from repro.dist import partition as PT
+    from repro.launch.hlo_analysis import analyze_hlo
     from repro.dist import fsdp as F
     from repro.dist import transport as T
     from repro.dist.axes import activation_sharding
@@ -92,7 +101,9 @@ _SCRIPT = """
         hints, hsize = tr.hint_axes(mesh)
         fn = jax.jit(step)
         with mesh, activation_sharding(hints, hsize, "model", 2):
-            wb = wire_bytes(fn.lower(state, batch, 0).as_text())
+            lowered = fn.lower(state, batch, 0)
+            wb = wire_bytes(lowered.as_text())
+            cost = analyze_hlo(lowered.compile().as_text())
             state, m = fn(state, batch, 0)           # compile + warm
             jax.block_until_ready(m["loss"])
             iters = 2 if SMOKE else 5
@@ -103,8 +114,15 @@ _SCRIPT = """
         us = (time.perf_counter() - t0) / iters * 1e6
         total = sum(wb.values())
         by = "+".join(f"{{dt}}:{{b}}" for dt, b in sorted(wb.items()))
+        # label reduce-scatter→all-reduce+slice fallback sites: on this
+        # backend those collectives move the whole buffer per shard, so
+        # the post-opt module over-counts wire bytes at exactly these
+        # sites (the StableHLO accounting above is unaffected)
+        fb = (f"rs_fallbacks={{cost.rs_fallbacks}}"
+              f"(ar+slice,{{int(cost.rs_fallback_bytes)}}B)"
+              if cost.rs_fallbacks else "rs_fallbacks=0")
         print(f"row grad_wire_{{wire}}_{{pods}}pod_step {{us:.1f}} "
-              f"wire_bytes={{total}} dtypes={{by or 'implicit-gspmd'}}")
+              f"wire_bytes={{total}} dtypes={{by or 'implicit-gspmd'}} {{fb}}")
         return total
 
     cases = [(2, "fp32"), (2, "compressed")]

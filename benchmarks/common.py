@@ -6,6 +6,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import profile
 from repro.core import QArith, get_policy
 from repro.models import registry as R
 from repro.optim import adamw, constant, sgd
@@ -18,10 +19,18 @@ ROWS: list[tuple[str, float, str]] = []
 
 def row(name: str, us_per_call: float, derived):
     ROWS.append((name, us_per_call, derived))
+    sess = profile.current()
+    if sess is not None:
+        sess.record_row(name, us_per_call, derived)
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    sess = profile.current()
+    if sess is not None:
+        # collective accounting rides the timing loop: lower the jitted
+        # callable once and run it through the loop-aware HLO cost model
+        sess.record_jitted(fn, args)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()

@@ -1,11 +1,21 @@
 """Benchmark runner — one section per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows (shared convention).
-Usage: ``PYTHONPATH=src python -m benchmarks.run [--only fig2,table4]``
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--only fig2,table4]
+[--profile [DIR]]``
+
+``--profile`` wraps every section in a :class:`repro.profile.
+ProfileSession` and writes one ``repro.profile/v1`` JSON artifact per
+section to DIR (default ``profiles/``): per-step wall timers (every
+``row`` the bench printed), memory high-water, and per-dtype collective
+bytes recovered from the optimized HLO of each jitted callable the bench
+timed — including the CPU reduce-scatter→all-reduce+slice fallback
+count. Validate artifacts with ``python tools/check_profile.py DIR/*.json``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -23,6 +33,7 @@ SECTIONS = [
     ("fsdp_memory", "benchmarks.bench_fsdp"),
     ("serve_batching", "benchmarks.bench_serve"),
     ("grad_wire", "benchmarks.bench_grad_wire"),
+    ("decode_attn", "benchmarks.bench_decode_attention"),
 ]
 
 
@@ -30,6 +41,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section prefixes to run")
+    ap.add_argument("--profile", nargs="?", const="profiles", default=None,
+                    metavar="DIR",
+                    help="emit one repro.profile/v1 JSON per section "
+                         "into DIR (default: profiles/)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
@@ -38,11 +53,24 @@ def main() -> None:
             continue
         t0 = time.time()
         mod = __import__(module, fromlist=["run"])
+        sess = None
+        if args.profile is not None:
+            from repro.profile import ProfileSession
+            sess = ProfileSession(name)
+            sess.__enter__()
         try:
             mod.run()
         except Exception as e:  # keep the suite going; report the failure
+            if sess is not None:
+                sess.error = f"{type(e).__name__}: {e}"
             print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
             print(f"{name}_ERROR,0.0,{type(e).__name__}")
+        finally:
+            if sess is not None:
+                sess.__exit__(None, None, None)
+                path = os.path.join(args.profile, f"{name}.json")
+                sess.write(path)
+                print(f"# profile -> {path}", file=sys.stderr)
         print(f"# section {name} took {time.time() - t0:.1f}s", file=sys.stderr)
 
 

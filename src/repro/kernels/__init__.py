@@ -4,14 +4,18 @@
 - fused_adamw — Algorithm 4/5 in one HBM pass (SR / Kahan variants)
 - fused_sgd   — Algorithm 2/3 in one HBM pass
 - qmatmul     — bf16-in / f32-accumulate / round-once FMAC matmul (Table 1)
+- decode_attention — fused single-token attention over the slotted KV pool
+- dispatch    — trace-time routing of layer code onto the fused kernels
 
 Validated against ref.py oracles in interpret mode on CPU; BlockSpecs are
 VMEM/MXU-aligned for the TPU target.
 """
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.decode_attention import fused_decode_attention
 from repro.kernels.fused_adamw import fused_adamw
 from repro.kernels.fused_sgd import fused_sgd
 from repro.kernels.qmatmul import qmatmul
 from repro.kernels.sr_cast import sr_cast
 
-__all__ = ["ops", "ref", "fused_adamw", "fused_sgd", "qmatmul", "sr_cast"]
+__all__ = ["dispatch", "ops", "ref", "fused_adamw", "fused_decode_attention",
+           "fused_sgd", "qmatmul", "sr_cast"]

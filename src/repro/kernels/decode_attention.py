@@ -1,0 +1,98 @@
+"""Pallas kernel: fused single-token decode attention over the slotted KV pool.
+
+One grid step per decode lane (slot). The whole per-lane pipeline —
+QK^T scores, logit softcap, causal/ring/window masking, softmax, PV — runs
+in one kernel launch with f32 internals, so the KV pool is read exactly
+once per lane and the (Sc,)-sized score/probability rows never round-trip
+through HBM. Lane masking happens *in the kernel*: a parked lane
+(``q_pos < 0`` — the continuous-batching engine's ``active`` mask routed
+through its position vector) takes the ``pl.when`` fast path that writes
+zeros and never touches its KV block, so parked lanes cost zero HBM
+traffic on the pool.
+
+GQA stays in the grouped form (q reshaped ``(B, Hkv, G, D)``) — decode is
+memory-bound on the cache, and the grouped contraction reads each KV head
+once for its G query heads.
+
+Numerics mirror :func:`repro.models.layers.decode_attention` op-for-op
+(f32 scores, ``jax.nn.softmax``, probabilities cast to the compute dtype
+before PV, one output rounding by the caller) so the engine's
+token-for-token parity contract with ``generate()`` survives the swap
+(tests/test_serve.py::TestFusedDecode).
+
+CPU CI runs the same kernel in interpret mode (the module default off
+TPU). On a real TPU the cache-length axis ``Sc`` should be padded to the
+128-lane register width by the caller; the kernel itself is
+shape-agnostic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_decode_attention", "decode_attention_kernel"]
+
+NEG_INF = -1e30
+
+
+def decode_attention_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
+                            out_ref, *, scale: float, window, softcap,
+                            p_dtype):
+    """One lane: q (1,Hkv,G,D); k/v (1,Sc,Hkv,D); kpos (1,Sc); qpos (1,1)."""
+    q_pos = qpos_ref[0, 0]
+
+    @pl.when(q_pos >= 0)
+    def _active():
+        q = q_ref[0]                                   # (Hkv, G, D)
+        k = k_ref[0]                                   # (Sc, Hkv, D)
+        k_pos = kpos_ref[0]                            # (Sc,)
+        s = jnp.einsum("hgd,khd->hgk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = (k_pos[None, None, :] <= q_pos) & (k_pos[None, None, :] >= 0)
+        if window is not None:
+            ok &= q_pos - k_pos[None, None, :] < window
+        s = jnp.where(ok, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out_ref[0] = jnp.einsum("hgk,khd->hgd", p.astype(p_dtype), v_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(q_pos < 0)
+    def _parked():
+        # parked lane: zero output, KV block untouched (no HBM read)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def fused_decode_attention(q, k_cache, v_cache, k_pos, q_pos, *,
+                           window=None, softcap=None, p_dtype=jnp.bfloat16,
+                           interpret: bool | None = None):
+    """q: (B,1,Hq,D); caches: (B,Sc,Hkv,D); k_pos: (B,Sc) i32;
+    q_pos: (B,) i32 (−1 ⇒ parked lane). Returns f32 (B,1,Hq,D) —
+    unrounded, the caller applies the policy's single output rounding."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, Hq, D = q.shape
+    _, Sc, Hkv, _ = k_cache.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+    scale = 1.0 / (D ** 0.5)
+
+    q_bs = pl.BlockSpec((1, Hkv, group, D), lambda i: (i, 0, 0, 0))
+    kv_bs = pl.BlockSpec((1, Sc, Hkv, D), lambda i: (i, 0, 0, 0))
+    out = pl.pallas_call(
+        partial(decode_attention_kernel, scale=scale, window=window,
+                softcap=softcap, p_dtype=p_dtype),
+        grid=(B,),
+        in_specs=[q_bs, kv_bs, kv_bs,
+                  pl.BlockSpec((1, Sc), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=q_bs,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), jnp.float32),
+        interpret=interpret,
+    )(qg, k_cache, v_cache, k_pos, qp)
+    return out.reshape(B, 1, Hq, D)

@@ -1,0 +1,35 @@
+"""Trace-time kernel dispatch.
+
+A thread-local context that lets an entry point (``make_serve_step``,
+the engine, a bench) opt whole traces into fused Pallas kernels without
+threading flags through every layer of the model stack — the layer code
+asks :func:`fused_decode_enabled` at trace time and routes itself.
+
+This is deliberately *trace*-scoped, not runtime-scoped: the context
+manager wraps the function body that jit traces, so the decision is
+baked into the compiled executable and costs nothing per step.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+__all__ = ["fused_decode", "fused_decode_enabled"]
+
+_local = threading.local()
+
+
+@contextmanager
+def fused_decode(enabled: bool = True):
+    """Route ``repro.models.layers.decode_attention`` through the fused
+    Pallas decode kernel for everything traced inside this block."""
+    prev = getattr(_local, "fused_decode", False)
+    _local.fused_decode = bool(enabled)
+    try:
+        yield
+    finally:
+        _local.fused_decode = prev
+
+
+def fused_decode_enabled() -> bool:
+    return getattr(_local, "fused_decode", False)

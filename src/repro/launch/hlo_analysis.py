@@ -92,6 +92,15 @@ class HloCost:
     #: why ``benchmarks/bench_grad_wire.py`` measures its wire bytes
     #: from the pre-partitioning StableHLO instead.
     collective_bytes_by_dtype: dict = field(default_factory=dict)
+    #: reduce-scatter → all-reduce+slice fallback sites (static count).
+    #: The CPU SPMD partitioner lowers an implicit reduce-scatter (sharded
+    #: output of a cross-shard sum) to a full all-reduce followed by a
+    #: partition-id-indexed dynamic-slice — every shard moves the *whole*
+    #: buffer, so wire-byte accounting over-counts by the shard factor
+    #: unless these sites are labeled. ``rs_fallback_bytes`` is the
+    #: all-reduced (pre-slice) bytes at those sites.
+    rs_fallbacks: int = 0
+    rs_fallback_bytes: float = 0.0
 
     @property
     def collective_bytes(self) -> float:
@@ -191,6 +200,57 @@ def _op_bytes(op: _Op, sizes, line: str) -> float:
             ob = min(ob, 16 * max(op.out_bytes, 1))  # slices hide inside
         total += ob
     return total
+
+
+# dataflow propagation sets for the reduce-scatter-fallback detector:
+# partition-id reaches the slice index through scalar arithmetic; the
+# all-reduce result reaches the slice through layout/plumbing ops only
+_PID_PROP = {"convert", "multiply", "add", "subtract", "divide", "remainder",
+             "bitcast", "copy", "reshape", "select", "clamp", "maximum",
+             "minimum", "and", "or", "shift-right-logical", "shift-left"}
+_AR_PROP = {"get-tuple-element", "bitcast", "copy", "convert", "reshape",
+            "transpose"}
+
+
+def _detect_rs_fallback(comps: dict, sizes: dict) -> tuple[int, float]:
+    """Count all-reduce+slice sites standing in for a reduce-scatter.
+
+    Signature (what the CPU SPMD partitioner emits): a ``dynamic-slice``
+    — bare, or wrapped in a kLoop fusion — whose operands are reachable
+    from both an ``all-reduce`` result and ``partition-id``. Each site
+    means the full pre-scatter buffer crossed the wire on every shard.
+    """
+    n, b = 0, 0.0
+    for comp in comps.values():
+        ar: set[str] = set()
+        pid: set[str] = set()
+        for op in comp.ops:
+            kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if kind == "all-reduce":
+                ar.add(op.name)
+                continue
+            if kind == "partition-id":
+                pid.add(op.name)
+                continue
+            ops_in = _operands(op.line)
+            hits_ar = any(o in ar for o in ops_in)
+            hits_pid = any(o in pid for o in ops_in)
+            sliceish = kind == "dynamic-slice"
+            if kind == "fusion" and hits_ar and hits_pid:
+                called = _CALLS_RE.search(op.line)
+                body = comps.get(called.group(1)) if called else None
+                sliceish = body is not None and any(
+                    o.kind == "dynamic-slice" for o in body.ops)
+            if sliceish and hits_ar and hits_pid:
+                n += 1
+                b += max((sizes.get(o, (0, []))[0]
+                          for o in ops_in if o in ar), default=0)
+                continue
+            if hits_ar and kind in _AR_PROP:
+                ar.add(op.name)
+            if hits_pid and kind in _PID_PROP:
+                pid.add(op.name)
+    return n, b
 
 
 _CALLS_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
@@ -321,4 +381,6 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
     cost.collective_bytes_by_dtype = {
         k: dict(d["by_dtype"]) for k, d in coll.items()}
     cost.bytes_by_kind = dict(sorted(kinds.items(), key=lambda kv: -kv[1]))
+    cost.rs_fallbacks, cost.rs_fallback_bytes = \
+        _detect_rs_fallback(comps, sizes)
     return cost

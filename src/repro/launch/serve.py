@@ -65,6 +65,10 @@ def main():
     ap.add_argument("--data-parallel", type=int, default=0,
                     help="mesh data-axis size (0 = no mesh)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="decode attention via the fused Pallas kernel "
+                         "(one launch per lane, parked lanes skipped "
+                         "in-kernel); token parity with the generic path")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -78,7 +82,8 @@ def main():
         mesh = jax.make_mesh((args.data_parallel, args.model_parallel),
                              ("data", "model"))
     engine = Engine(params, cfg, policy, n_slots=args.slots,
-                    max_len=args.max_len, mesh=mesh, eos_id=args.eos_id)
+                    max_len=args.max_len, mesh=mesh, eos_id=args.eos_id,
+                    fused_decode=args.fused_decode)
 
     rng = np.random.default_rng(args.seed)
     # every request must fit the pool: clamp generation lengths to what the

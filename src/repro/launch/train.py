@@ -44,7 +44,7 @@ from repro.dist import transport as TR
 from repro.dist.axes import activation_sharding
 from repro.launch.mesh import make_local_mesh
 from repro.models import registry as R
-from repro.optim import adamw, linear_warmup_cosine
+from repro.optim import adamw, fused_adamw_optimizer, linear_warmup_cosine
 from repro.train.loop import TrainLoopConfig, run_training
 from repro.train.step import make_train_step
 from repro.train.train_state import make_train_state
@@ -80,6 +80,11 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1,
                     help="microbatches scanned per step over one gathered "
                          "working copy (single reduce + update)")
+    ap.add_argument("--fused-update", action="store_true",
+                    help="run the optimizer update through the fused Pallas "
+                         "kernels (one HBM pass over w/m/v/g/c); on a mesh "
+                         "the update runs shard-local inside shard_map — "
+                         "bf16 policies only")
     ap.add_argument("--coordinator", default=None,
                     help="host:port of the jax.distributed coordinator "
                          "(process 0); defaults to $REPRO_COORDINATOR")
@@ -112,9 +117,16 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     params = R.init(cfg, jax.random.PRNGKey(args.seed), policy.param_dtype)
-    opt = adamw(policy, b2=0.997, weight_decay=0.01)
     lr_schedule = linear_warmup_cosine(
         args.lr, max(args.steps // 20, 1), args.steps)
+
+    def make_opt(mesh=None, pspecs=None):
+        # the fused kernels run shard-local (inside shard_map) on a mesh,
+        # so the optimizer is built only after the placement is known
+        if args.fused_update:
+            return fused_adamw_optimizer(policy, b2=0.997, weight_decay=0.01,
+                                         mesh=mesh, pspecs=pspecs)
+        return adamw(policy, b2=0.997, weight_decay=0.01)
 
     dp, mp, fp, pods = (args.data_parallel, args.model_parallel,
                         args.fsdp_parallel, args.pods)
@@ -128,6 +140,7 @@ def main():
         mesh = make_local_mesh(dp, mp, fsdp=fp, pods=pods)
         placement = PT.default_placement(mesh, fsdp=use_fsdp)
         pspecs = PT.param_specs(params, cfg, mesh, placement)
+        opt = make_opt(mesh, pspecs)
         transport = TR.make_transport(mesh=mesh, placement=placement,
                                       pspecs=pspecs, wire=args.grad_wire)
         state = make_train_state(params, opt, transport=transport)
@@ -143,6 +156,7 @@ def main():
                                        PT.MODEL_AXIS, mp):
             _run(state, step_fn, cfg, args, state_shardings=shardings)
     else:
+        opt = make_opt()
         transport = TR.make_transport(wire=args.grad_wire)
         state = make_train_state(params, opt, transport=transport)
         step_fn = make_train_step(cfg, policy, opt, lr_schedule,

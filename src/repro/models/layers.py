@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qarith import QArith
+from repro.kernels import dispatch
 
 __all__ = ["dense_init", "dense", "embed_init", "rope", "mrope",
            "flash_attention", "decode_attention", "attention_init",
@@ -294,7 +295,17 @@ def decode_attention(qa: QArith, q, k_cache, v_cache, k_pos, *, q_pos,
     q: (B,1,Hq,D); caches: (B,Sc,Hkv,D); k_pos: (B,Sc) int32 positions
     (−1 ⇒ empty slot); q_pos: (B,) current position. GQA keeps the grouped
     form here (decode is memory-bound on the cache; no head-TP reshape).
+
+    Inside a ``kernels.dispatch.fused_decode()`` context the whole
+    pipeline runs as one Pallas kernel per lane (same op order, same
+    single output rounding — token parity preserved).
     """
+    if dispatch.fused_decode_enabled():
+        from repro.kernels.decode_attention import fused_decode_attention
+        out = fused_decode_attention(q, k_cache, v_cache, k_pos, q_pos,
+                                     window=window, softcap=softcap,
+                                     p_dtype=qa.dtype)
+        return qa.cast(out)
     B, _, Hq, D = q.shape
     _, Sc, Hkv, _ = k_cache.shape
     group = Hq // Hkv

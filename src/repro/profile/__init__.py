@@ -1,0 +1,11 @@
+"""Step profiler for the bench suite (``benchmarks/run.py --profile``).
+
+Per-bench wall/step timers, memory high-water, and per-dtype collective
+bytes — structured JSON (schema ``repro.profile/v1``), so the known sore
+spots (scan-carry remat, under-pinned activation hints, the CPU
+reduce-scatter fallback) are numbers, not lore. See docs/kernels.md.
+"""
+from repro.profile.schema import SCHEMA_ID, validate
+from repro.profile.session import ProfileSession, current
+
+__all__ = ["ProfileSession", "current", "SCHEMA_ID", "validate"]

@@ -1,0 +1,88 @@
+"""Schema for the step-profiler JSON artifact (``repro.profile/v1``).
+
+Hand-rolled validation (no jsonschema dependency) shared by
+``tools/check_profile.py``, the CI profiler-smoke step, and the tests —
+one definition of "schema-valid" everywhere.
+"""
+from __future__ import annotations
+
+SCHEMA_ID = "repro.profile/v1"
+
+_NUM = (int, float)
+
+
+def _check(errs, cond: bool, msg: str):
+    if not cond:
+        errs.append(msg)
+
+
+def validate(obj) -> list[str]:
+    """Return a list of problems (empty ⇒ the artifact is schema-valid)."""
+    errs: list[str] = []
+    if not isinstance(obj, dict):
+        return ["artifact is not a JSON object"]
+    _check(errs, obj.get("schema") == SCHEMA_ID,
+           f"schema != {SCHEMA_ID!r}: {obj.get('schema')!r}")
+    _check(errs, isinstance(obj.get("bench"), str) and obj.get("bench"),
+           "bench: non-empty string required")
+    _check(errs, isinstance(obj.get("wall_s"), _NUM)
+           and obj.get("wall_s", -1) >= 0, "wall_s: number >= 0 required")
+
+    steps = obj.get("steps")
+    _check(errs, isinstance(steps, list), "steps: list required")
+    for i, s in enumerate(steps if isinstance(steps, list) else []):
+        ok = (isinstance(s, dict) and isinstance(s.get("name"), str)
+              and isinstance(s.get("us_per_call"), _NUM)
+              and "derived" in s)
+        _check(errs, ok, f"steps[{i}]: needs name/us_per_call/derived")
+
+    mem = obj.get("memory")
+    _check(errs, isinstance(mem, dict), "memory: object required")
+    if isinstance(mem, dict):
+        _check(errs, isinstance(mem.get("ru_maxrss_kb"), _NUM),
+               "memory.ru_maxrss_kb: number required")
+        devs = mem.get("devices")
+        _check(errs, isinstance(devs, list), "memory.devices: list required")
+        for i, d in enumerate(devs if isinstance(devs, list) else []):
+            ok = (isinstance(d, dict) and isinstance(d.get("id"), int)
+                  and isinstance(d.get("platform"), str)
+                  and (d.get("stats") is None or isinstance(d["stats"], dict)))
+            _check(errs, ok, f"memory.devices[{i}]: needs id/platform/stats")
+
+    col = obj.get("collectives")
+    _check(errs, isinstance(col, dict), "collectives: object required")
+    if isinstance(col, dict):
+        _check(errs, isinstance(col.get("total_bytes"), _NUM),
+               "collectives.total_bytes: number required")
+        _check(errs, isinstance(col.get("hlo_records"), int),
+               "collectives.hlo_records: int required")
+        _check(errs, isinstance(col.get("rs_fallbacks"), int),
+               "collectives.rs_fallbacks: int required")
+        bk = col.get("by_kind")
+        _check(errs, isinstance(bk, dict), "collectives.by_kind: object")
+        for k, d in (bk.items() if isinstance(bk, dict) else ()):
+            ok = (isinstance(d, dict) and isinstance(d.get("count"), _NUM)
+                  and isinstance(d.get("bytes"), _NUM))
+            _check(errs, ok, f"collectives.by_kind[{k}]: needs count/bytes")
+        bd = col.get("bytes_by_dtype")
+        _check(errs, isinstance(bd, dict),
+               "collectives.bytes_by_dtype: object")
+        for k, d in (bd.items() if isinstance(bd, dict) else ()):
+            ok = isinstance(d, dict) and all(
+                isinstance(v, _NUM) for v in d.values())
+            _check(errs, ok,
+                   f"collectives.bytes_by_dtype[{k}]: dtype→bytes map")
+
+    env = obj.get("env")
+    _check(errs, isinstance(env, dict), "env: object required")
+    if isinstance(env, dict):
+        _check(errs, isinstance(env.get("backend"), str), "env.backend: str")
+        _check(errs, isinstance(env.get("device_count"), int),
+               "env.device_count: int")
+        _check(errs, isinstance(env.get("jax_version"), str),
+               "env.jax_version: str")
+
+    err = obj.get("error")
+    _check(errs, err is None or isinstance(err, str),
+           "error: null or string")
+    return errs

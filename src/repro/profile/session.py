@@ -1,0 +1,160 @@
+"""Step profiler: wall/device timers, memory high-water, collective bytes.
+
+A :class:`ProfileSession` is an explicit, thread-local recording context:
+
+    with ProfileSession("appB_kernels") as sess:
+        run_bench()                 # rows + jitted HLO recorded via hooks
+    sess.write("profiles/appB_kernels.json")
+
+While a session is active, ``benchmarks.common.row`` reports every
+timing row into it and ``benchmarks.common.time_fn`` lowers each jitted
+callable it times and feeds the optimized HLO through
+:func:`repro.launch.hlo_analysis.analyze_hlo` — so per-dtype collective
+bytes (and the CPU reduce-scatter→all-reduce+slice fallback count) come
+out of the same loop-aware cost model the dry-run artifacts use, with no
+monkeypatching and no per-step overhead when profiling is off.
+
+Memory high-water is ``ru_maxrss`` (process-wide peak RSS — on CPU the
+device heap lives inside it) plus per-device ``memory_stats()`` where
+the backend exposes them (TPU/GPU; the CPU backend reports ``null``).
+
+The artifact schema is ``repro.profile/v1`` (:mod:`repro.profile.schema`);
+``tools/check_profile.py`` validates emitted files in CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import threading
+import time
+
+import jax
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.profile.schema import SCHEMA_ID
+
+__all__ = ["ProfileSession", "current"]
+
+_local = threading.local()
+
+
+def current():
+    """The innermost active session on this thread, or ``None``."""
+    stack = getattr(_local, "stack", None)
+    return stack[-1] if stack else None
+
+
+class ProfileSession:
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.steps: list[dict] = []
+        self.error: str | None = None
+        self._wall0: float | None = None
+        self.wall_s = 0.0
+        # collective accounting accumulated over every recorded HLO
+        self._by_kind: dict[str, dict] = {}
+        self._by_dtype: dict[str, dict] = {}
+        self._total_bytes = 0.0
+        self._rs_fallbacks = 0
+        self._hlo_records = 0
+        self._seen_hlo: set[int] = set()
+
+    # -- context ------------------------------------------------------------
+    def __enter__(self):
+        self._wall0 = time.perf_counter()
+        if not hasattr(_local, "stack"):
+            _local.stack = []
+        _local.stack.append(self)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        _local.stack.pop()
+        self.wall_s = time.perf_counter() - self._wall0
+        if exc is not None and self.error is None:
+            self.error = f"{type(exc).__name__}: {exc}"
+        return False
+
+    # -- recording hooks ----------------------------------------------------
+    def record_row(self, name: str, us_per_call: float, derived):
+        self.steps.append({"name": name,
+                           "us_per_call": float(us_per_call),
+                           "derived": str(derived)})
+
+    def record_hlo(self, text: str, entry: str | None = None):
+        """Accumulate collective bytes from one optimized-HLO module."""
+        cost = analyze_hlo(text, entry)
+        self._hlo_records += 1
+        self._rs_fallbacks += cost.rs_fallbacks
+        for kind, d in cost.collectives.items():
+            agg = self._by_kind.setdefault(kind, {"count": 0, "bytes": 0.0})
+            agg["count"] += d["count"]
+            agg["bytes"] += d["bytes"]
+            self._total_bytes += d["bytes"]
+            dts = self._by_dtype.setdefault(kind, {})
+            for dt, b in d["by_dtype"].items():
+                dts[dt] = dts.get(dt, 0.0) + b
+        return cost
+
+    def record_jitted(self, fn, args) -> None:
+        """Best-effort: lower a jitted callable and record its HLO.
+
+        Dedupes on the callable's identity so timing loops don't count a
+        program's collectives once per ``time_fn`` call. Anything that
+        isn't a jit wrapper (or fails to lower, e.g. because the trace
+        needs a mesh context that's gone) is skipped silently — the
+        profiler must never break the bench it is watching.
+        """
+        if id(fn) in self._seen_hlo or not hasattr(fn, "lower"):
+            return
+        self._seen_hlo.add(id(fn))
+        try:
+            text = fn.lower(*args).compile().as_text()
+        except Exception:
+            return
+        self.record_hlo(text)
+
+    # -- artifact -----------------------------------------------------------
+    def result(self) -> dict:
+        devices = []
+        for d in jax.local_devices():
+            try:
+                stats = d.memory_stats()
+            except Exception:
+                stats = None
+            devices.append({"id": int(d.id), "platform": str(d.platform),
+                            "stats": stats})
+        wall = (self.wall_s if self._wall0 is None or self.wall_s
+                else time.perf_counter() - self._wall0)
+        return {
+            "schema": SCHEMA_ID,
+            "bench": self.bench,
+            "wall_s": float(wall),
+            "steps": self.steps,
+            "memory": {
+                "ru_maxrss_kb":
+                    resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+                "devices": devices,
+            },
+            "collectives": {
+                "total_bytes": self._total_bytes,
+                "by_kind": self._by_kind,
+                "bytes_by_dtype": self._by_dtype,
+                "rs_fallbacks": self._rs_fallbacks,
+                "hlo_records": self._hlo_records,
+            },
+            "env": {
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "jax_version": jax.__version__,
+            },
+            "error": self.error,
+        }
+
+    def write(self, path: str) -> dict:
+        out = self.result()
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return out

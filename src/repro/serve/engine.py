@@ -111,7 +111,7 @@ class Engine:
 
     def __init__(self, params, cfg, policy: PrecisionPolicy, *,
                  n_slots: int = 8, max_len: int = 128, mesh=None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, fused_decode: bool = False):
         if cfg.encdec:
             raise ValueError("Engine is decoder-only; encoder-decoder "
                              "models serve via repro.serve.decode.generate")
@@ -122,8 +122,9 @@ class Engine:
         self.eos_id = eos_id
         self.pool = CachePool(params, cfg, policy, n_slots=n_slots,
                               max_len=max_len, mesh=mesh)
-        self._step_fn = jax.jit(make_serve_step(cfg, policy),
-                                donate_argnums=(1,))
+        self._step_fn = jax.jit(
+            make_serve_step(cfg, policy, fused_decode=fused_decode),
+            donate_argnums=(1,))
         self._in_shardings = None
         if mesh is not None:
             from jax.sharding import NamedSharding

@@ -64,7 +64,22 @@ def _batch_dim(path) -> int:
 
 
 def _split_microbatches(batch: PyTree, k: int, what: str) -> PyTree:
-    """Split every leaf's batch dim into k chunks, chunk dim leading."""
+    """Split every leaf's batch dim into k chunks, chunk dim leading.
+
+    The reshape that folds the batch dim into (k, B/k) erases the
+    batch-dim sharding hint the input pipeline placed on the leaves, and
+    row-major propagation would naturally land on a *chunk*-sharded
+    layout (rows 8i..8i+7 of a [4]-sharded 32-row batch ARE chunk i) —
+    under which every scan iteration's slice lives on one device. The
+    explicit re-pin of the per-microbatch batch dim (now at ``bdim + 1``)
+    makes the layout the scan body needs part of the program rather than
+    a propagation outcome. Measured on the 2×2×2 CPU mesh at batch=32 the
+    pin is currently a no-op (GSPMD already reshards once, before the
+    loop — identical collective counts with and without); the regression
+    that matters is guarded in tests/test_fsdp.py: grad_accum must not
+    multiply the FSDP working-copy all-gather bytes.
+    """
+    from repro.dist.axes import shard_batch
 
     def split(path, x):
         bdim = _batch_dim(path)
@@ -72,7 +87,7 @@ def _split_microbatches(batch: PyTree, k: int, what: str) -> PyTree:
             raise ValueError(
                 f"global batch {x.shape[bdim]} not divisible by {what}={k}")
         parts = x.shape[:bdim] + (k, x.shape[bdim] // k) + x.shape[bdim + 1:]
-        return jnp.moveaxis(x.reshape(parts), bdim, 0)
+        return shard_batch(jnp.moveaxis(x.reshape(parts), bdim, 0), bdim + 1)
 
     return jax.tree_util.tree_map_with_path(split, batch)
 
@@ -139,6 +154,14 @@ def make_train_step(cfg, policy: PrecisionPolicy, optimizer, lr_schedule,
         # (FSDP: the bf16-wire all-gather of the working copy)
         wc = transport.prepare(compute_params(state.params, policy))
         if grad_accum > 1:
+            # one-gather-per-step contract: the gathered working copy is
+            # formed here, outside the microbatch scan, and closed over
+            # by the body. Inspection of the optimized HLO (2×2×2 CPU
+            # mesh, batch 32) confirms XLA keeps the FSDP working-copy
+            # all-gathers in the entry computation at ga>1 — total
+            # all-gather bytes are flat between ga=1 and ga=4; the only
+            # loop-body gathers are the small per-microbatch embedding
+            # scatter-add ones (regression: tests/test_fsdp.py)
             mbs = _split_microbatches(batch, grad_accum, "grad_accum")
             first = jax.tree_util.tree_map(lambda x: x[0], mbs)
             g_shape = jax.eval_shape(lambda w, m: _micro_grads(w, m)[1],
@@ -234,7 +257,7 @@ def make_eval_step(cfg, policy: PrecisionPolicy, *, attn_chunk: int = 1024):
     return eval_step
 
 
-def make_serve_step(cfg, policy: PrecisionPolicy):
+def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False):
     """Slot-indexed decode step:
     ``(params, cache, token, pos[, active, reset]) → (next_token, new_cache)``.
 
@@ -263,15 +286,27 @@ def make_serve_step(cfg, policy: PrecisionPolicy):
       dropped, pool untouched); their recurrent state is carried
       through by :func:`repro.serve.cache.keep_active` and they report
       token −1.
+
+    ``fused_decode=True`` traces the step inside the
+    :func:`repro.kernels.dispatch.fused_decode` context, so attention
+    against the KV pool runs as the fused Pallas decode kernel (one
+    launch per lane, parked lanes skipped in-kernel) — token-for-token
+    parity with the generic path (tests/test_serve.py::TestFusedDecode).
     """
     # deferred: repro.serve.engine imports this module (serve sits above
     # train in the layering), so the helper import can't run at load time
+    from repro.kernels import dispatch
     from repro.serve import cache as SC
 
     qa = QArith(policy)
 
     def serve_step(params, cache, token, pos, active=None, reset=None,
                    mrope_positions=None):
+        with dispatch.fused_decode(fused_decode):
+            return _body(params, cache, token, pos, active, reset,
+                         mrope_positions)
+
+    def _body(params, cache, token, pos, active, reset, mrope_positions):
         wc = compute_params(params, policy)
         if reset is not None:
             cache = SC.reset_slots(cache, reset)

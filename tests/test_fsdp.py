@@ -326,3 +326,65 @@ def test_fsdp_elastic_resume_reshards_onto_current_mesh():
     assert vals["restored_step"] == 1, out
     assert vals["values_ok"] == 1, out
     assert vals["resharded"] == 1, out
+
+
+@pytest.mark.dist
+def test_grad_accum_keeps_working_copy_gather_out_of_the_scan():
+    """Lowered-HLO regression for the one-gather-per-step contract:
+    ``grad_accum=k`` must not multiply the FSDP working-copy all-gather
+    bytes (a gather sunk into the microbatch scan would show up ~k×).
+    Also pins the reduce-scatter→all-reduce+slice fallback detector to
+    the CPU partitioner output it was calibrated against."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from repro.core import get_policy
+        from repro.dist import partition as PT
+        from repro.dist import fsdp as F
+        from repro.dist.axes import activation_sharding
+        from repro.launch.hlo_analysis import analyze_hlo
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import registry as R
+        from repro.optim import adamw, constant
+        from repro.train.step import make_fsdp_train_step
+        from repro.train.train_state import make_train_state
+
+        policy = get_policy("bf16_sr_kahan")
+        cfg = R.get_config("qwen2.5-3b").reduced()
+        params = R.init(cfg, jax.random.PRNGKey(0), policy.param_dtype)
+        opt = adamw(policy, b2=0.997)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (16, 8), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+
+        mesh = make_local_mesh(2, 2, fsdp=2)
+        pl = PT.default_placement(mesh, fsdp=True)
+        pspecs = PT.param_specs(params, cfg, mesh, pl)
+        state = jax.device_put(make_train_state(params, opt),
+                               F.train_state_shardings(
+                                   make_train_state(params, opt), cfg,
+                                   mesh, pl))
+        bspecs = PT.batch_specs(batch, mesh)
+        batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+                 for k, v in batch.items()}
+
+        for ga in (1, 4):
+            step = make_fsdp_train_step(cfg, policy, opt, constant(1e-3),
+                                        pspecs=pspecs, placement=pl,
+                                        attn_chunk=8, grad_accum=ga)
+            with mesh, activation_sharding(PT.dp_axes(mesh),
+                                           PT.dp_size(mesh), "model", 2):
+                text = jax.jit(step).lower(state, batch, 0).compile().as_text()
+            c = analyze_hlo(text)
+            ag = c.collectives.get("all-gather", {"count": 0, "bytes": 0})
+            print(f"ga{ga}_ag_bytes", int(ag["bytes"]))
+            print(f"ga{ga}_rs_fallbacks", c.rs_fallbacks)
+    """)
+    vals = {l.split()[0]: float(l.split()[1])
+            for l in out.strip().splitlines()}
+    assert vals["ga1_ag_bytes"] > 0, out
+    # trip-count-weighted gather bytes stay flat as grad_accum scales
+    assert vals["ga4_ag_bytes"] < 1.5 * vals["ga1_ag_bytes"], out
+    # the CPU partitioner lowers the gradient reduce-scatter as
+    # all-reduce + partition-id slice; the detector must label it
+    assert vals["ga1_rs_fallbacks"] >= 1, out

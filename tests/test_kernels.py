@@ -161,3 +161,187 @@ def test_fused_kahan_accumulates_small_updates():
                              stochastic=False, lr=1.0, momentum=0.0)
     assert float(w_n[0]) == 1.0                      # nearest: halted
     assert abs(float(w[0]) - (1 - 0.05)) < 0.01      # kahan: moved
+
+
+# ---------------------------------------------------------------------------
+# Bitwise nearest parity + SR unbiasedness (ISSUE 7 acceptance)
+# ---------------------------------------------------------------------------
+
+def _dyadic(key, shape, scale=1.0):
+    """bf16 values whose products/sums stay exact in f32: k·2⁻⁴, |k|<16.
+
+    With exact arithmetic an FMA contracts to the same value as mul+add,
+    so kernel-vs-reference comparison is bitwise regardless of how the
+    two lowerings fuse — the nearest-rounding parity the sweeps above can
+    only assert to 1 ulp."""
+    k = jax.random.randint(key, shape, -15, 16)
+    return (k.astype(jnp.float32) * scale / 16.0).astype(jnp.bfloat16)
+
+
+@pytest.mark.parametrize("kahan", [False, True])
+def test_fused_adamw_nearest_bitwise_on_dyadic_grid(kahan):
+    n = 4096
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    w = _dyadic(ks[0], (n,))
+    m = _dyadic(ks[1], (n,), scale=0.25)
+    v = jnp.abs(_dyadic(ks[2], (n,), scale=0.25))
+    g = _dyadic(ks[3], (n,))
+    c = jnp.zeros((n,), jnp.bfloat16) if kahan else None
+    hp = dict(lr=2.0 ** -6, b1=0.5, b2=0.5, eps=2.0 ** -10, wd=0.0,
+              c1=0.5, c2=0.5)
+    got = fused_adamw(w, m, v, g, c=c, bits=None, stochastic=False, **hp)
+    want = ref.fused_adamw_ref(w, m, v, g, c=c, bits=None,
+                               stochastic=False, **hp)
+    for a, b in zip(got, want):
+        if a is None:
+            assert b is None
+        else:
+            assert bool(jnp.all(a == b))
+
+
+@pytest.mark.parametrize("kahan", [False, True])
+def test_fused_sgd_nearest_bitwise_on_dyadic_grid(kahan):
+    n = 4096
+    key = jax.random.PRNGKey(12)
+    ks = jax.random.split(key, 3)
+    w = _dyadic(ks[0], (n,))
+    m = _dyadic(ks[1], (n,), scale=0.25)
+    g = _dyadic(ks[2], (n,))
+    c = jnp.zeros((n,), jnp.bfloat16) if kahan else None
+    got = fused_sgd(w, m, g, c=c, bits=None, stochastic=False,
+                    lr=0.25, momentum=0.5, wd=0.0)
+    want = ref.fused_sgd_ref(w, m, g, c=c, bits=None, stochastic=False,
+                             lr=0.25, momentum=0.5, wd=0.0)
+    for a, b in zip(got, want):
+        if a is None:
+            assert b is None
+        else:
+            assert bool(jnp.all(a == b))
+
+
+def test_fused_sgd_sr_is_unbiased_where_nearest_stalls():
+    """The paper's core claim at kernel level: a sub-ulp update (|η·g| <
+    ulp(w)/2) is erased by nearest rounding but preserved in expectation
+    by SR — the empirical mean over independent bit draws must match the
+    exact f32 value, not the nearest-rounded one."""
+    n = 1 << 16
+    w = jnp.ones((n,), jnp.bfloat16)
+    m = jnp.zeros((n,), jnp.bfloat16)
+    g = jnp.full((n,), 2.0 ** -11, jnp.bfloat16)   # ulp(1)/8
+    exact = 1.0 - 2.0 ** -11
+    w_near, _, _ = fused_sgd(w, m, g, c=None, bits=None, stochastic=False,
+                             lr=1.0, momentum=0.0, wd=0.0)
+    assert bool(jnp.all(w_near == jnp.bfloat16(1.0)))       # halted
+    bits = _bits(jax.random.PRNGKey(13), (n,))
+    w_sr, _, _ = fused_sgd(w, m, g, c=None, bits=bits, stochastic=True,
+                           lr=1.0, momentum=0.0, wd=0.0)
+    mean = float(jnp.mean(w_sr.astype(jnp.float32)))
+    # binomial mean: p = 1/8 of elements drop one ulp; 5σ ≈ 2.6e-5
+    assert abs(mean - exact) < 3e-5, (mean, exact)
+    assert mean < 1.0                                        # it moved
+
+
+def test_fused_adamw_sr_is_unbiased_where_nearest_stalls():
+    n = 1 << 16
+    w = jnp.ones((n,), jnp.bfloat16)
+    m = jnp.zeros((n,), jnp.bfloat16)
+    v = jnp.zeros((n,), jnp.bfloat16)
+    g = jnp.ones((n,), jnp.bfloat16)
+    hp = dict(lr=2.0 ** -11, b1=0.9, b2=0.99609375, eps=0.0, wd=0.0,
+              c1=0.9, c2=0.99609375)
+    w_near, m1, v1, _ = fused_adamw(w, m, v, g, c=None, bits=None,
+                                    stochastic=False, **hp)
+    assert bool(jnp.all(w_near == jnp.bfloat16(1.0)))       # halted
+    # exact pre-rounding value, mirroring the kernel's elementwise math
+    mf = jnp.bfloat16(0.1 * 1.0).astype(jnp.float32)
+    vf = jnp.bfloat16((1 - hp["b2"]) * 1.0).astype(jnp.float32)
+    m_hat = jnp.bfloat16(mf / 0.1).astype(jnp.float32)
+    v_hat = jnp.bfloat16(jnp.sqrt(vf / (1 - hp["c2"]))).astype(jnp.float32)
+    u = jnp.bfloat16(hp["lr"] * m_hat / v_hat).astype(jnp.float32)
+    exact = float(1.0 - u)
+    bits = _bits(jax.random.PRNGKey(14), (n,))
+    w_sr, _, _, _ = fused_adamw(w, m, v, g, c=None, bits=bits,
+                                stochastic=True, **hp)
+    mean = float(jnp.mean(w_sr.astype(jnp.float32)))
+    assert abs(mean - exact) < 3e-5, (mean, exact)
+    assert mean < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fused decode attention ≡ repro.models.layers.decode_attention
+# ---------------------------------------------------------------------------
+
+class TestFusedDecodeAttention:
+    B, SC, HKV, GROUP, D = 4, 16, 2, 2, 8
+
+    def _inputs(self, seed=0, filled=10):
+        from repro.core import get_policy
+        from repro.core.qarith import QArith
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 3)
+        hq = self.HKV * self.GROUP
+        q = jax.random.normal(ks[0], (self.B, 1, hq, self.D), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (self.B, self.SC, self.HKV, self.D),
+                              jnp.bfloat16)
+        v = jax.random.normal(ks[2], (self.B, self.SC, self.HKV, self.D),
+                              jnp.bfloat16)
+        k_pos = jnp.where(jnp.arange(self.SC)[None, :] < filled,
+                          jnp.arange(self.SC)[None, :],
+                          -1).astype(jnp.int32).repeat(self.B, 0)
+        q_pos = jnp.full((self.B,), filled - 1, jnp.int32)
+        return QArith(get_policy("bf16_standard")), q, k, v, k_pos, q_pos
+
+    def _both(self, qa, q, k, v, k_pos, q_pos, **kw):
+        from repro.kernels import dispatch
+        from repro.models.layers import decode_attention
+        want = decode_attention(qa, q, k, v, k_pos, q_pos=q_pos, **kw)
+        with dispatch.fused_decode():
+            got = decode_attention(qa, q, k, v, k_pos, q_pos=q_pos, **kw)
+        return got, want
+
+    def test_bitwise_parity_plain(self):
+        got, want = self._both(*self._inputs())
+        assert got.dtype == want.dtype and got.shape == want.shape
+        assert bool(jnp.all(got == want))
+
+    def test_bitwise_parity_window_and_softcap(self):
+        qa, q, k, v, k_pos, q_pos = self._inputs(seed=1, filled=12)
+        got, want = self._both(qa, q, k, v, k_pos, q_pos,
+                               window=5, softcap=30.0)
+        assert bool(jnp.all(got == want))
+
+    def test_parked_lanes_output_zero_and_match(self):
+        qa, q, k, v, k_pos, q_pos = self._inputs(seed=2)
+        q_pos = q_pos.at[1].set(-1).at[3].set(-1)   # park two lanes
+        got, want = self._both(qa, q, k, v, k_pos, q_pos)
+        assert float(jnp.abs(got[1]).max()) == 0.0
+        assert float(jnp.abs(got[3]).max()) == 0.0
+        # active lanes still match the reference bitwise
+        assert bool(jnp.all(got[0] == want[0]))
+        assert bool(jnp.all(got[2] == want[2]))
+
+    def test_ragged_depths_jit(self):
+        qa, q, k, v, k_pos, q_pos = self._inputs(seed=3)
+        q_pos = jnp.asarray([2, 9, 0, 5], jnp.int32)
+        from repro.kernels import dispatch
+        from repro.models.layers import decode_attention
+
+        @jax.jit
+        def fused(q, k, v, kp, qp):
+            with dispatch.fused_decode():
+                return decode_attention(qa, q, k, v, kp, q_pos=qp)
+
+        got = fused(q, k, v, k_pos, q_pos)
+        want = decode_attention(qa, q, k, v, k_pos, q_pos=q_pos)
+        assert bool(jnp.all(got == want))
+
+    def test_dispatch_context_restores(self):
+        from repro.kernels import dispatch
+        assert not dispatch.fused_decode_enabled()
+        with dispatch.fused_decode():
+            assert dispatch.fused_decode_enabled()
+            with dispatch.fused_decode(False):
+                assert not dispatch.fused_decode_enabled()
+            assert dispatch.fused_decode_enabled()
+        assert not dispatch.fused_decode_enabled()

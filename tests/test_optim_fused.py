@@ -93,3 +93,69 @@ def test_fused_sgd_trains_lstsq():
         params, state = opt.update(g, state, params, step=i, key=k, lr=0.01)
     mse = float(jnp.mean((X @ params["w"].astype(jnp.float32) - y) ** 2))
     assert mse < 5.0, mse
+
+
+# ---------------------------------------------------------------------------
+# Shard-local mode (mesh= / pspecs=): the update runs on local FSDP
+# shards inside shard_map — 8 virtual devices, -m dist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.dist
+class TestShardLocal:
+    def _setup(self, pol):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        policy = get_policy(pol)
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32),
+                                         jnp.bfloat16),
+                  "b": jax.random.normal(jax.random.PRNGKey(1), (32,),
+                                         jnp.bfloat16)}
+        grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (64, 32),
+                                        jnp.bfloat16),
+                 "b": jax.random.normal(jax.random.PRNGKey(3), (32,),
+                                        jnp.bfloat16)}
+        mesh = jax.make_mesh((8,), ("fsdp",))
+        pspecs = {"w": P("fsdp", None), "b": P("fsdp")}
+        sharded = {k: jax.device_put(v, NamedSharding(mesh, pspecs[k]))
+                   for k, v in params.items()}
+        gsharded = {k: jax.device_put(v, NamedSharding(mesh, pspecs[k]))
+                    for k, v in grads.items()}
+        return policy, params, grads, mesh, pspecs, sharded, gsharded
+
+    def test_nearest_bitexact_vs_global(self, eight_virtual_devices):
+        """Nearest rounding is shard-oblivious: the shard-local update
+        must be bit-for-bit the global fused update."""
+        (policy, params, grads, mesh, pspecs,
+         sharded, gsharded) = self._setup("bf16_kahan")
+        g_opt = fused_adamw_optimizer(policy, b2=0.997)
+        l_opt = fused_adamw_optimizer(policy, b2=0.997, mesh=mesh,
+                                      pspecs=pspecs)
+        key = jax.random.PRNGKey(4)
+        pg, _ = g_opt.update(grads, g_opt.init(params), params,
+                             step=0, key=key, lr=1e-3)
+        with mesh:
+            pl_, _ = l_opt.update(gsharded, l_opt.init(sharded), sharded,
+                                  step=0, key=key, lr=1e-3)
+        for k in params:
+            assert bool(jnp.all(pg[k] == jax.device_get(pl_[k]))), k
+
+    def test_sr_deterministic_and_close(self, eight_virtual_devices):
+        """SR folds the shard index into the key: not bitwise vs the
+        global draw, but deterministic and within 1 ulp of it."""
+        (policy, params, grads, mesh, pspecs,
+         sharded, gsharded) = self._setup("bf16_sr")
+        l_opt = fused_sgd_optimizer(policy, momentum=0.9, mesh=mesh,
+                                    pspecs=pspecs)
+        g_opt = fused_sgd_optimizer(policy, momentum=0.9)
+        key = jax.random.PRNGKey(5)
+        with mesh:
+            a, _ = l_opt.update(gsharded, l_opt.init(sharded), sharded,
+                                step=0, key=key, lr=1e-2)
+            b, _ = l_opt.update(gsharded, l_opt.init(sharded), sharded,
+                                step=0, key=key, lr=1e-2)
+        for k in params:
+            assert bool(jnp.all(jax.device_get(a[k])
+                                == jax.device_get(b[k]))), k
+        pg, _ = g_opt.update(grads, g_opt.init(params), params,
+                             step=0, key=key, lr=1e-2)
+        for k in params:
+            _close(jax.device_get(a[k]), pg[k], scale=params[k])

@@ -1,0 +1,99 @@
+"""repro.profile: session capture, schema validation, runner artifacts."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import profile
+from repro.profile import ProfileSession, SCHEMA_ID, validate
+
+
+class TestSchema:
+    def test_empty_session_result_validates(self):
+        with ProfileSession("unit") as sess:
+            pass
+        obj = sess.result()
+        assert obj["schema"] == SCHEMA_ID
+        assert validate(obj) == []
+
+    def test_rows_and_jitted_hlo_are_captured(self):
+        fn = jax.jit(lambda x: (x.astype(jnp.float32) ** 2).sum())
+        x = jnp.ones((128,), jnp.bfloat16)
+        with ProfileSession("unit") as sess:
+            sess.record_row("step_a", 12.5, "derived=1")
+            sess.record_jitted(fn, (x,))
+            sess.record_jitted(fn, (x,))      # dedup by callable identity
+        obj = sess.result()
+        assert validate(obj) == []
+        assert [s["name"] for s in obj["steps"]] == ["step_a"]
+        assert obj["steps"][0]["us_per_call"] == 12.5
+        assert obj["collectives"]["hlo_records"] == 1
+        assert obj["memory"]["ru_maxrss_kb"] > 0
+        assert obj["env"]["backend"] == jax.default_backend()
+
+    def test_error_artifact_still_validates(self):
+        with ProfileSession("unit") as sess:
+            sess.error = "RuntimeError: boom"
+        obj = sess.result()
+        assert validate(obj) == []
+        assert obj["error"] == "RuntimeError: boom"
+
+    def test_validate_rejects_malformed(self):
+        with ProfileSession("unit") as sess:
+            pass
+        obj = sess.result()
+        obj["collectives"]["total_bytes"] = "lots"
+        assert validate(obj) != []
+        assert validate({"schema": "other/v9"}) != []
+
+
+class TestSessionScoping:
+    def test_current_returns_innermost_and_restores(self):
+        assert profile.current() is None
+        with ProfileSession("outer") as outer:
+            assert profile.current() is outer
+            with ProfileSession("inner") as inner:
+                assert profile.current() is inner
+            assert profile.current() is outer
+        assert profile.current() is None
+
+    def test_bench_row_reports_into_active_session(self):
+        from benchmarks.common import row
+        with ProfileSession("unit") as sess:
+            row("some_bench_row", 3.25, "x=1")
+        obj = sess.result()
+        assert obj["steps"][0]["name"] == "some_bench_row"
+        assert obj["steps"][0]["us_per_call"] == 3.25
+
+    def test_write_emits_valid_json(self, tmp_path):
+        with ProfileSession("unit") as sess:
+            sess.record_row("s", 1.0, "")
+        path = tmp_path / "sub" / "unit.json"
+        sess.write(str(path))
+        obj = json.loads(path.read_text())
+        assert validate(obj) == []
+        assert obj["bench"] == "unit"
+
+
+class TestCheckProfileCLI:
+    def test_cli_validates_and_flags(self, tmp_path):
+        import subprocess
+        import sys
+        from pathlib import Path
+        with ProfileSession("unit") as sess:
+            pass
+        good = tmp_path / "good.json"
+        sess.write(str(good))
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"schema": "nope"}')
+        root = Path(__file__).resolve().parent.parent
+        r = subprocess.run(
+            [sys.executable, str(root / "tools" / "check_profile.py"),
+             str(good)], capture_output=True, text=True)
+        assert r.returncode == 0, r.stdout + r.stderr
+        r = subprocess.run(
+            [sys.executable, str(root / "tools" / "check_profile.py"),
+             str(good), str(bad)], capture_output=True, text=True)
+        assert r.returncode == 1
+        assert "FAIL" in r.stdout

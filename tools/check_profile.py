@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Validate ``repro.profile/v1`` JSON artifacts (CI profiler-smoke step).
+
+Usage: ``python tools/check_profile.py profiles/*.json``
+
+Exits non-zero if any file is missing, unparsable, or fails the schema
+in :mod:`repro.profile.schema`. A profile whose ``error`` field is set
+still validates — a bench failure is the bench's problem; the artifact
+must be well-formed either way.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.profile import validate  # noqa: E402
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_profile.py FILE.json [FILE.json ...]",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for path in argv:
+        try:
+            with open(path) as f:
+                obj = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}")
+            bad += 1
+            continue
+        errs = validate(obj)
+        if errs:
+            bad += 1
+            print(f"FAIL {path}:")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            note = f" (bench error: {obj['error']})" if obj.get("error") else ""
+            print(f"ok   {path}: bench={obj['bench']} "
+                  f"steps={len(obj['steps'])} "
+                  f"collective_bytes={obj['collectives']['total_bytes']:.0f}"
+                  f"{note}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
