@@ -28,8 +28,19 @@ where post-opt byte accounting would over-count by the shard factor,
 i.e. the reason this bench reads the pre-partitioning module for wire
 bytes in the first place.
 
+Byte-accounting convention: the StableHLO numbers are **carrier** bytes
+— the dtype the all-reduce operand is emitted with (f32, or bf16 for
+the compressed wire). Each compressed row additionally reports
+``payload_bytes`` = Σ n_elem · ``fmt.bits``/8, the *format* payload
+(``CompressedWire.payload_bytes``): for the default bf16 wire the two
+coincide, but for sub-bf16/fp8 formats (see ``--sweep``) the carrier
+over-counts — bf12 rides a bf16 carrier on CPU yet moves 12 bits of
+information per element, and the payload column is the honest number.
+
 ``python benchmarks/bench_grad_wire.py --smoke`` runs the 2-pod pair
-only (the CI smoke).
+only (the CI smoke). ``--sweep`` (optionally with ``--smoke``) runs the
+format × policy × model sweep instead — see
+:mod:`benchmarks.bench_grad_wire_sweep`.
 """
 from __future__ import annotations
 
@@ -114,6 +125,11 @@ _SCRIPT = """
         us = (time.perf_counter() - t0) / iters * 1e6
         total = sum(wb.values())
         by = "+".join(f"{{dt}}:{{b}}" for dt, b in sorted(wb.items()))
+        # carrier bytes (the emitted all-reduce operand dtype) vs format
+        # payload bytes (fmt.bits-based; identical for the bf16 wire,
+        # narrower for sub-bf16 formats — see the sweep)
+        payload = (tr.payload_bytes(params)
+                   if hasattr(tr, "payload_bytes") else total)
         # label reduce-scatter→all-reduce+slice fallback sites: on this
         # backend those collectives move the whole buffer per shard, so
         # the post-opt module over-counts wire bytes at exactly these
@@ -122,7 +138,8 @@ _SCRIPT = """
               f"(ar+slice,{{int(cost.rs_fallback_bytes)}}B)"
               if cost.rs_fallbacks else "rs_fallbacks=0")
         print(f"row grad_wire_{{wire}}_{{pods}}pod_step {{us:.1f}} "
-              f"wire_bytes={{total}} dtypes={{by or 'implicit-gspmd'}} {{fb}}")
+              f"wire_bytes={{total}} carrier={{by or 'implicit-gspmd'}} "
+              f"payload_bytes={{payload}} {{fb}}")
         return total
 
     cases = [(2, "fp32"), (2, "compressed")]
@@ -166,4 +183,8 @@ def run(*, smoke: bool = False) -> None:
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     print("name,us_per_call,derived")
-    run(smoke=smoke)
+    if "--sweep" in sys.argv:
+        from benchmarks.bench_grad_wire_sweep import run as run_sweep
+        run_sweep(smoke=smoke)
+    else:
+        run(smoke=smoke)

@@ -1,17 +1,27 @@
 """Fig 10 — below 16-bit (bf14/bf12/bf10, 8 exponent bits kept).
-derived = final loss per format with SR and with Kahan."""
+derived = final loss per format with SR and with Kahan.
+
+``--smoke`` (the CI hook) runs one low-step cell (bf12 + SR) so the
+sub-16 storage path is exercised on every push instead of only by hand.
+"""
 from __future__ import annotations
+
+import sys
 
 from benchmarks.common import row, train_dlrm
 
 
-def run():
-    for fam in ("bf14", "bf12", "bf10"):
-        for tech in ("sr", "kahan"):
-            losses, auc, _ = train_dlrm(f"{fam}_{tech}", steps=300)
-            row(f"fig10_dlrm_{fam}_{tech}", 0.0,
-                f"auc={auc:.4f};final_loss={sum(losses[-10:])/10:.4f}")
+def run(*, smoke: bool = False):
+    cells = [("bf12", "sr")] if smoke else [
+        (fam, tech) for fam in ("bf14", "bf12", "bf10")
+        for tech in ("sr", "kahan")]
+    steps = 40 if smoke else 300
+    for fam, tech in cells:
+        losses, auc, _ = train_dlrm(f"{fam}_{tech}", steps=steps)
+        row(f"fig10_dlrm_{fam}_{tech}", 0.0,
+            f"auc={auc:.4f};final_loss={sum(losses[-10:])/10:.4f}")
 
 
 if __name__ == "__main__":
-    run()
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

@@ -33,6 +33,7 @@ SECTIONS = [
     ("fsdp_memory", "benchmarks.bench_fsdp"),
     ("serve_batching", "benchmarks.bench_serve"),
     ("grad_wire", "benchmarks.bench_grad_wire"),
+    ("grad_wire_sweep", "benchmarks.bench_grad_wire_sweep"),
     ("decode_attn", "benchmarks.bench_decode_attention"),
 ]
 

@@ -1,20 +1,22 @@
 """Core numeric-format library: the paper's contribution as composable JAX.
 
 - :mod:`repro.core.formats`  — rounding primitives (RNE / stochastic) for
-  bf16 and simulated sub-16-bit formats.
+  bf16, simulated sub-16-bit formats, and the fp8 wire formats e5m2/e4m3.
 - :mod:`repro.core.policy`   — precision policies (paper Table 2 presets).
 - :mod:`repro.core.qarith`   — FMAC-model operator set bound to a policy.
 """
-from repro.core.formats import (BF10, BF12, BF14, BF16, FORMATS, FP16, FP32,
-                                FloatFormat, nearest_representable,
-                                round_nearest, round_stochastic,
-                                stochastic_round_bf16, ulp)
+from repro.core.formats import (BF10, BF12, BF14, BF16, E4M3, E5M2, FORMATS,
+                                FP16, FP32, FloatFormat, clamp_finite,
+                                nearest_representable, round_nearest,
+                                round_stochastic, stochastic_round_bf16, ulp,
+                                wire_carrier_dtype)
 from repro.core.policy import PRESETS, PrecisionPolicy, get_policy, make_policy
 from repro.core.qarith import QArith
 
 __all__ = [
-    "BF10", "BF12", "BF14", "BF16", "FP16", "FP32", "FORMATS", "FloatFormat",
-    "round_nearest", "round_stochastic", "stochastic_round_bf16", "ulp",
+    "BF10", "BF12", "BF14", "BF16", "E5M2", "E4M3", "FP16", "FP32",
+    "FORMATS", "FloatFormat", "round_nearest", "round_stochastic",
+    "stochastic_round_bf16", "ulp", "clamp_finite", "wire_carrier_dtype",
     "nearest_representable", "PRESETS", "PrecisionPolicy", "get_policy",
     "make_policy", "QArith",
 ]

@@ -14,6 +14,13 @@ Two families of formats:
 * generic ``FloatFormat(exp_bits, man_bits)`` — f32-carrier simulation used
   for the paper's sub-16-bit study (Fig 10: bf14/bf12/bf10) and fp16
   (Fig 12). Values are stored as f32 snapped onto the format's grid.
+* small-exponent formats (``exp_bits < 8``, beyond fp16's native-f16
+  path): the fp8 wire formats e5m2/e4m3 of *Training DNNs with 8-bit
+  Floating Point Numbers*. Rounding decomposes into the e8 mantissa
+  trick on the normal range, an exact fixed-spacing grid below
+  ``min_normal`` (the format's subnormals), and saturation at
+  ``max_finite`` — these grids have no ±inf, so finite overflow clamps
+  (the OCP-fn convention) instead of escaping as infinity.
 
 All quantizers are pure jax-traceable functions.
 """
@@ -28,8 +35,9 @@ import jax.numpy as jnp
 
 __all__ = [
     "FloatFormat", "BF16", "BF14", "BF12", "BF10", "FP16", "FP32",
-    "round_nearest", "round_stochastic", "stochastic_round_bf16",
-    "nearest_representable", "ulp",
+    "E5M2", "E4M3", "round_nearest", "round_stochastic",
+    "stochastic_round_bf16", "nearest_representable", "ulp",
+    "clamp_finite", "wire_carrier_dtype",
 ]
 
 
@@ -67,14 +75,25 @@ class FloatFormat:
         return self.exp_bits == 8
 
     @property
+    def emax(self) -> int:
+        # largest unbiased exponent (== the IEEE bias for this width)
+        return 2 ** (self.exp_bits - 1) - 1
+
+    @property
     def max_finite(self) -> float:
-        if self.is_f32_exponent:
-            # exponent 254 (biased), mantissa all ones at this width
-            man = (2 ** self.man_bits - 1) / 2 ** self.man_bits
-            return float((1.0 + man) * 2.0 ** 127)
-        if self.name == "fp16":
-            return 65504.0
-        raise NotImplementedError(self.name)
+        # top exponent, mantissa all ones: (2 - 2^-m) · 2^emax.
+        # Reproduces 65504 for fp16 and the (1+man)·2^127 e8 value.
+        man = (2 ** self.man_bits - 1) / 2 ** self.man_bits
+        return float((1.0 + man) * 2.0 ** self.emax)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** (1 - self.emax))
+
+    @property
+    def sub_spacing(self) -> float:
+        # grid spacing of the format's subnormal range
+        return float(self.min_normal * 2.0 ** (-self.man_bits))
 
 
 BF16 = FloatFormat("bf16", 8, 7)
@@ -83,8 +102,10 @@ BF12 = FloatFormat("bf12", 8, 3)
 BF10 = FloatFormat("bf10", 8, 1)
 FP16 = FloatFormat("fp16", 5, 10)
 FP32 = FloatFormat("fp32", 8, 23)
+E5M2 = FloatFormat("e5m2", 5, 2)
+E4M3 = FloatFormat("e4m3", 4, 3)
 
-FORMATS = {f.name: f for f in (BF16, BF14, BF12, BF10, FP16, FP32)}
+FORMATS = {f.name: f for f in (BF16, BF14, BF12, BF10, FP16, FP32, E5M2, E4M3)}
 
 
 def _bits(x: jax.Array) -> jax.Array:
@@ -135,6 +156,40 @@ def _round_nearest_e8(x: jax.Array, fmt: FloatFormat) -> jax.Array:
     return _ste_nearest(fmt.shift)(x.astype(jnp.float32))
 
 
+@functools.lru_cache(maxsize=32)
+def _ste_nearest_small_exp(fmt: FloatFormat):
+    """RNE for ``exp_bits < 8`` formats (e5m2/e4m3) on an f32 carrier.
+
+    Three regimes: normals reuse the e8 mantissa trick (the f32 exponent
+    field is always in-range for these narrow formats), subnormals snap
+    onto the fixed ``sub_spacing`` grid with half-to-even ``jnp.round``,
+    and overflow saturates at ``max_finite`` — these wire formats carry
+    no ±inf, so clamping is the no-escape convention (OCP "fn"). NaN
+    passes through. Straight-through gradient as in _ste_nearest.
+    """
+    mx = fmt.max_finite
+    mn = fmt.min_normal
+    sp = fmt.sub_spacing
+    shift = fmt.shift
+
+    @jax.custom_jvp
+    def q(x):
+        clamped = jnp.clip(x, -mx, mx)  # maps ±inf to ±max_finite too
+        normal = _round_nearest_e8_impl(clamped, shift)
+        sub = jnp.round(clamped / sp) * sp
+        out = jnp.where(jnp.abs(clamped) < mn, sub, normal)
+        # the RNE trick can round the top half-ulp past max_finite
+        out = jnp.clip(out, -mx, mx)
+        return jnp.where(jnp.isnan(x), x, out)
+
+    @q.defjvp
+    def _jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        return q(x), dx
+
+    return q
+
+
 def round_nearest(x: jax.Array, fmt: FloatFormat) -> jax.Array:
     """Round-to-nearest-even onto ``fmt``'s grid; result carried in f32."""
     x = x.astype(jnp.float32)
@@ -144,7 +199,9 @@ def round_nearest(x: jax.Array, fmt: FloatFormat) -> jax.Array:
         return x.astype(jnp.bfloat16).astype(jnp.float32)
     if fmt.name == "fp16":
         return x.astype(jnp.float16).astype(jnp.float32)
-    return _round_nearest_e8(x, fmt)
+    if fmt.is_f32_exponent:
+        return _round_nearest_e8(x, fmt)
+    return _ste_nearest_small_exp(fmt)(x)
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +274,49 @@ def _round_stochastic_fp16(x: jax.Array, key: jax.Array) -> jax.Array:
     return jnp.where(jnp.isfinite(x), y, x)
 
 
+@functools.lru_cache(maxsize=32)
+def _ste_stochastic_small_exp(fmt: FloatFormat):
+    """SR for ``exp_bits < 8`` formats, randomness passed in (see
+    _ste_stochastic). Normals use the e8 bit-trick with the input clamped
+    to ±max_finite (so the round-up neighbor never leaves the grid);
+    subnormals do exact floor+Bernoulli on the ``sub_spacing`` lattice.
+    """
+    mx = fmt.max_finite
+    mn = fmt.min_normal
+    sp = fmt.sub_spacing
+    shift = fmt.shift
+
+    @jax.custom_jvp
+    def q(x, noise, u):
+        clamped = jnp.clip(x, -mx, mx)
+        b = _bits(clamped)
+        normal = _from_bits((b + noise) & ~jnp.uint32(2 ** shift - 1))
+        t = clamped / sp
+        lo = jnp.floor(t)
+        sub = (lo + (u < (t - lo)).astype(jnp.float32)) * sp
+        out = jnp.where(jnp.abs(clamped) < mn, sub, normal)
+        # x in the top binade can SR up one grid step past max_finite
+        out = jnp.clip(out, -mx, mx)
+        return jnp.where(jnp.isnan(x), x, out)
+
+    @q.defjvp
+    def _jvp(primals, tangents):
+        x, noise, u = primals
+        dx = tangents[0]
+        return q(x, noise, u), dx
+
+    return q
+
+
+def _round_stochastic_small_exp(x: jax.Array, key: jax.Array,
+                                fmt: FloatFormat) -> jax.Array:
+    k_bits, k_u = jax.random.split(key)
+    noise = jax.random.bits(k_bits, shape=x.shape, dtype=jnp.uint32) \
+        & jnp.uint32(2 ** fmt.shift - 1)
+    u = jax.random.uniform(k_u, shape=x.shape, dtype=jnp.float32)
+    return _ste_stochastic_small_exp(fmt)(x.astype(jnp.float32), noise, u)
+
+
 def round_stochastic(x: jax.Array, key: jax.Array, fmt: FloatFormat) -> jax.Array:
     """Stochastically round onto ``fmt``'s grid; result carried in f32."""
     x = x.astype(jnp.float32)
@@ -224,7 +324,9 @@ def round_stochastic(x: jax.Array, key: jax.Array, fmt: FloatFormat) -> jax.Arra
         return x
     if fmt.name == "fp16":
         return _round_stochastic_fp16(x, key)
-    return _round_stochastic_e8(x, key, fmt)
+    if fmt.is_f32_exponent:
+        return _round_stochastic_e8(x, key, fmt)
+    return _round_stochastic_small_exp(x, key, fmt)
 
 
 def stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
@@ -239,6 +341,23 @@ def stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
 def ulp(x: jax.Array, fmt: FloatFormat) -> jax.Array:
     """Distance to the next-larger representable magnitude in ``fmt``."""
     x = jnp.abs(round_nearest(x, fmt))
+    if not fmt.is_f32_exponent:
+        # Small-exponent grids (fp16/e5m2/e4m3): spacing is 2^(e−m) for
+        # normals (e from the f32 carrier's exponent field — always
+        # in-range for these narrow formats) and the format's fixed
+        # subnormal spacing below min_normal. fp16 takes this branch
+        # too: the e8 bit-trick below would report the f32-relative
+        # mantissa-truncation spacing in fp16's subnormal range (2^-25
+        # at 2^-15) instead of the true fixed 2^-24 grid. The power of
+        # two is assembled from bits, not jnp.exp2 — the CPU lowering
+        # of exp2 can be an ulp off at integer arguments, which breaks
+        # exactness and monotonicity exactly at the subnormal boundary.
+        # All spacings are f32 normals, so no FTZ correction is needed.
+        e_field = (_bits(x) >> 23) & jnp.uint32(0xFF)
+        e_field = jnp.maximum(e_field, jnp.uint32(fmt.man_bits + 1))
+        normal = _from_bits((e_field - jnp.uint32(fmt.man_bits)) << 23)
+        return jnp.where(x < fmt.min_normal,
+                         jnp.float32(fmt.sub_spacing), normal)
     b = _bits(x)
     step = jnp.uint32(2 ** fmt.shift)
     diff = _from_bits(b + step) - x
@@ -251,6 +370,31 @@ def ulp(x: jax.Array, fmt: FloatFormat) -> jax.Array:
     shift_c = jnp.minimum(jnp.maximum(exp, jnp.uint32(1)) - 1, jnp.uint32(23))
     tiny = _from_bits(step << shift_c)
     return jnp.where(fmt.shift + shift_c < 23, tiny, diff)
+
+
+def clamp_finite(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """Saturate ``x`` to ``[-max_finite, max_finite]`` (±inf included; NaN
+    propagates). This is the wire's overflow convention: low formats carry
+    no ±inf, so an overflowing gradient clamps instead of escaping as inf
+    and poisoning the all-reduce."""
+    mx = jnp.float32(fmt.max_finite)
+    return jnp.clip(x.astype(jnp.float32), -mx, mx)
+
+
+def wire_carrier_dtype(fmt: FloatFormat):
+    """CPU/simulation carrier dtype whose grid is a superset of ``fmt``'s.
+
+    Every e8 sub-16-bit format (bf14/bf12/bf10) is an exact subset of
+    bfloat16; fp16/e5m2/e4m3 values (incl. their subnormals — e5m2's
+    finest spacing 2^-16 and e4m3's 2^-9 both sit on float16's grid) are
+    exact in float16. The *accounted* wire width is ``fmt.bits``, not the
+    carrier's — see bench_grad_wire.
+    """
+    if fmt.name == "fp32":
+        return jnp.float32
+    if fmt.is_f32_exponent:
+        return jnp.bfloat16
+    return jnp.float16
 
 
 def nearest_representable(value: float, fmt: FloatFormat = BF16, *, below_one: bool = False) -> float:

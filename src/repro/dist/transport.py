@@ -52,6 +52,7 @@ the same leading wire dim.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -59,6 +60,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro._compat import ensure_shard_map
+from repro.core.formats import BF16, FORMATS, FP32, FloatFormat
 from repro.dist import fsdp as F
 from repro.dist import partition as PT
 from repro.dist.partition import Placement
@@ -67,7 +69,7 @@ from repro.optim import grad_compress as GC
 ensure_shard_map()
 
 __all__ = ["GradientTransport", "Fp32Psum", "ReduceScatter",
-           "CompressedWire", "make_transport"]
+           "CompressedWire", "WirePolicy", "make_transport"]
 
 PyTree = Any
 
@@ -78,6 +80,64 @@ def _wire_size(mesh, axis: Optional[str]) -> int:
     if mesh is None or axis is None or axis not in mesh.axis_names:
         return 1
     return mesh.shape[axis]
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePolicy:
+    """Per-leaf wire-format selection: which gradients skip compression.
+
+    "A Study of BFLOAT16 for Deep Learning Training" (PAPERS.md) keeps
+    small/sensitive tensors at higher precision; this is that idea on the
+    wire. Leaves with fewer than ``keep_below`` elements, or whose tree
+    path contains any of ``keep_patterns`` (embeddings, norms, biases —
+    matched case-insensitively against ``jax.tree_util.keystr``), ride
+    fp32; everything else (the bulk matmul leaves) takes the configured
+    low format. Keeping the small leaves costs almost no bytes — the wire
+    is dominated by the matmul weights — but protects exactly the tensors
+    whose quantization noise is hardest to average away.
+    """
+
+    keep_below: int = 2048
+    keep_patterns: tuple[str, ...] = ("embed", "norm", "bias", "scale")
+
+    def format_for(self, name: str, size: int,
+                   base_fmt: FloatFormat) -> FloatFormat:
+        """Wire format for one leaf: ``base_fmt`` or the fp32 keep."""
+        lname = name.lower()
+        if size < self.keep_below or \
+                any(p in lname for p in self.keep_patterns):
+            return FP32
+        return base_fmt
+
+    def describe(self) -> str:
+        pats = ",".join(self.keep_patterns) or "-"
+        return f"keep<{self.keep_below}|{pats}"
+
+    @classmethod
+    def parse(cls, spec: str) -> "WirePolicy":
+        """Build from a ``--wire-keep-fp32`` spec string.
+
+        Comma-separated tokens: a numeric token sets ``keep_below``,
+        every other token is a name pattern. ``"default"`` (or ``""``)
+        gives the stock policy; ``"none"`` disables pattern/size keeps
+        (every leaf rides the low format).
+        """
+        spec = (spec or "").strip()
+        if spec in ("", "default"):
+            return cls()
+        if spec == "none":
+            return cls(keep_below=0, keep_patterns=())
+        keep_below = 0
+        patterns: list[str] = []
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            if tok.isdigit():
+                keep_below = int(tok)
+            else:
+                patterns.append(tok)
+        return cls(keep_below=keep_below, keep_patterns=tuple(patterns))
 
 
 class GradientTransport:
@@ -218,15 +278,28 @@ class ReduceScatter(GradientTransport):
 
 
 class CompressedWire(GradientTransport):
-    """SR-to-bf16 wire with per-leaf Kahan error-feedback residuals.
+    """SR-compressed wire with per-leaf Kahan error-feedback residuals.
 
-    Each wire replica quantizes ``g + residual`` to bf16 with stochastic
-    rounding, the bf16 values cross the wire (``psum`` inside
-    ``shard_map`` over the wire axis — 2 bytes/element, half of an f32
-    reduce), and the residual keeps the quantization error for the next
-    step. With a single wire replica (no mesh, or the axis absent) the
-    same arithmetic runs locally — SR quantization with error feedback,
-    no collective — so the strategy is testable on one device.
+    Each wire replica quantizes ``g + residual`` onto ``fmt``'s grid with
+    stochastic rounding, the quantized values cross the wire (``psum``
+    inside ``shard_map`` over the wire axis), and the residual keeps the
+    quantization error for the next step. ``fmt`` is any
+    :class:`repro.core.formats.FloatFormat` — bf16 (the default, 2
+    bytes/element, half of an f32 reduce), the sub-16-bit e8 formats
+    bf14/bf12/bf10, or the fp8 wire formats e5m2/e4m3 (clamped at
+    ``max_finite``; these grids have no ±inf). On CPU/simulation the
+    psum operand rides a *carrier* dtype (bf16 or f16 — the narrowest
+    native dtype whose grid contains ``fmt``'s); accounted wire bytes
+    are ``fmt.bits``-based, see :meth:`payload_bytes`. With a single
+    wire replica (no mesh, or the axis absent) the same arithmetic runs
+    locally — SR quantization with error feedback, no collective — so
+    the strategy is testable on one device.
+
+    ``policy`` (a :class:`WirePolicy`, optional) selects per-leaf keeps:
+    matching leaves ride fp32, the rest ride ``fmt``. Formats are
+    resolved at trace time *outside* shard_map from global leaf names
+    and sizes (inside the body leaves are local shards — their sizes
+    would be wrong).
 
     ``inner`` (default :class:`Fp32Psum` pass-through) supplies the ICI
     behaviour: under FSDP pass a :class:`ReduceScatter` so
@@ -238,18 +311,67 @@ class CompressedWire(GradientTransport):
     — one error-feedback buffer per wire replica — sharded
     ``P(wire_axis, *param_spec)`` so each replica owns its buffer and
     the trailing dims co-shard leaf-for-leaf with the parameter.
+    (fp32-kept leaves keep their residual buffer too — always zero, but
+    a format-independent state layout means switching policy or format
+    never changes checkpoint shapes; resume-time format *drift* is
+    handled by zero-initing, see ``train/loop.py``.)
     """
 
     name = "compressed_wire"
 
     def __init__(self, *, axis: str = PT.POD_AXIS, mesh=None,
                  inner: GradientTransport | None = None,
-                 pspecs: PyTree | None = None):
+                 pspecs: PyTree | None = None,
+                 fmt: FloatFormat = BF16,
+                 policy: WirePolicy | None = None):
+        if fmt.name == "fp32":
+            raise ValueError("CompressedWire with an fp32 format is the "
+                             "Fp32Psum transport; use wire='fp32'")
         self.mesh = mesh
         self.inner = inner or Fp32Psum()
         self.pspecs = pspecs
+        self.fmt = fmt
+        self.policy = policy
         self.wire_replicas = _wire_size(mesh, axis)
         self.wire_axis = axis if self.wire_replicas > 1 else None
+
+    @property
+    def wire_format(self) -> str:
+        """Stable identity of the wire numerics (checkpoint drift key)."""
+        if self.policy is None:
+            return self.fmt.name
+        return f"{self.fmt.name}+{self.policy.describe()}"
+
+    # -- per-leaf format resolution (trace time, global shapes) ---------
+    def leaf_formats(self, tree: PyTree, *,
+                     stacked: bool = False) -> list[FloatFormat]:
+        """Wire format per flattened leaf of ``tree`` (params or grads).
+
+        ``stacked=True`` when leaves carry the leading wire-replica dim
+        (gradients inside ``reduce``): the policy's size threshold is
+        about the *parameter*, so the stack dim is divided out.
+        """
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        if self.policy is None:
+            return [self.fmt] * len(flat)
+        div = self.wire_replicas if stacked else 1
+        return [self.policy.format_for(jax.tree_util.keystr(path),
+                                       leaf.size // div, self.fmt)
+                for path, leaf in flat]
+
+    def payload_bytes(self, params: PyTree) -> int:
+        """Accounted wire bytes for one reduce: Σ n_elem · bits(fmt)/8.
+
+        This is the *format* width, not the carrier's — sub-bf16 formats
+        are simulated on a bf16/f16 carrier on CPU, and counting carrier
+        bytes would credit bf12 with bf16's 2 bytes/element (the
+        accounting bug this method exists to fix). Fractional-byte
+        widths accumulate in bits and round up once at the end.
+        """
+        fmts = self.leaf_formats(params)
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        bits = sum(leaf.size * f.bits for (_, leaf), f in zip(flat, fmts))
+        return -(-bits // 8)
 
     # -- error-feedback state -------------------------------------------
     def init_residuals(self, params):
@@ -283,17 +405,18 @@ class CompressedWire(GradientTransport):
         """Single wire replica: SR quantize + error feedback, no psum."""
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         res_leaves = treedef.flatten_up_to(residuals)
+        fmts = self.leaf_formats(grads)
         keys = jax.random.split(key, len(leaves))
         out, new_res = [], []
-        for g, r, k in zip(leaves, res_leaves, keys):
-            q, nr = GC.compress_leaf(g, r[0], k)
+        for g, r, k, fmt in zip(leaves, res_leaves, keys, fmts):
+            q, nr = GC.compress_leaf(g, r[0], k, fmt)
             out.append(q.astype(jnp.float32))
             new_res.append(nr[None])
         return (jax.tree_util.tree_unflatten(treedef, out),
                 jax.tree_util.tree_unflatten(treedef, new_res))
 
     def _reduce_sharded(self, grads, residuals, key):
-        """n > 1: bf16-SR psum over the wire axis inside shard_map.
+        """n > 1: low-format SR psum over the wire axis inside shard_map.
 
         ``grads`` arrive stacked ``(n, *shape)``; in/out specs put the
         stack dim on the wire axis so each replica sees exactly its own
@@ -301,15 +424,18 @@ class CompressedWire(GradientTransport):
         dims keep the parameter layout (ICI shards stay local — the
         quantize is elementwise and the psum touches only the wire
         axis). The reduced mean comes back unstacked and replicated
-        over the wire axis.
+        over the wire axis. Per-leaf formats resolve here, outside the
+        body, from the *global* stacked shapes (body leaves are local
+        shards) and reach the body by closure.
         """
         axis = self.wire_axis
         g_specs, out_specs = _wire_specs(self.pspecs, grads, axis)
+        fmts = self.leaf_formats(grads, stacked=True)
 
         def body(g, r, k):
             g = jax.tree_util.tree_map(lambda x: x[0], g)
             r = jax.tree_util.tree_map(lambda x: x[0], r)
-            red, nr = GC.compressed_psum(g, r, k, axis)
+            red, nr = GC.compressed_psum(g, r, k, axis, fmts)
             add_dim = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
             return add_dim(red), add_dim(nr)
 
@@ -323,7 +449,9 @@ class CompressedWire(GradientTransport):
 
 def make_transport(*, mesh=None, placement: Placement | None = None,
                    pspecs: PyTree | None = None, wire: str = "fp32",
-                   wire_axis: Optional[str] = None) -> GradientTransport:
+                   wire_axis: Optional[str] = None,
+                   wire_policy: WirePolicy | None = None
+                   ) -> GradientTransport:
     """Build the transport for a (mesh, placement) pair.
 
     ``wire`` selects the cross-pod strategy (``--grad-wire``):
@@ -332,7 +460,15 @@ def make_transport(*, mesh=None, placement: Placement | None = None,
       only when the mesh has a ``pod`` axis (DCN); otherwise it is the
       implicit GSPMD reduction, i.e. the historic step unchanged.
     * ``"compressed"`` — :class:`CompressedWire` on ``wire_axis``
-      (default: the ``pod`` axis when the mesh has one, else ``data``).
+      (default: the ``pod`` axis when the mesh has one, else ``data``)
+      at the historic SR-bf16 format.
+    * a format name — ``"bf16"``, ``"bf14"``, ``"bf12"``, ``"bf10"``,
+      ``"fp16"``, ``"e5m2"``, ``"e4m3"`` — :class:`CompressedWire` at
+      that :class:`~repro.core.formats.FloatFormat`.
+
+    ``wire_policy`` (optional :class:`WirePolicy`) adds the per-leaf
+    fp32 keep on any compressed wire; it is ignored for ``"fp32"``
+    (everything already rides fp32 there).
 
     The ICI side is independent: an FSDP placement yields a
     :class:`ReduceScatter` (standalone for ``fp32``, as ``inner`` for
@@ -356,16 +492,18 @@ def make_transport(*, mesh=None, placement: Placement | None = None,
             return _Fp32Wire(axis=axis, mesh=mesh, inner=inner,
                              pspecs=pspecs)
         return Fp32Psum(axis=axis, mesh=mesh, pspecs=pspecs)
-    if wire == "compressed":
+    if wire == "compressed" or wire in FORMATS:
+        fmt = BF16 if wire == "compressed" else FORMATS[wire]
         axis = wire_axis
         if axis is None:
             axis = (PT.POD_AXIS if mesh is not None
                     and PT.POD_AXIS in mesh.axis_names else PT.DATA_AXIS)
         _check_wire_axis_free(axis, mesh, placement)
         return CompressedWire(axis=axis, mesh=mesh, inner=inner,
-                              pspecs=pspecs)
+                              pspecs=pspecs, fmt=fmt, policy=wire_policy)
     raise ValueError(f"unknown gradient wire {wire!r}; "
-                     f"expected 'fp32' or 'compressed'")
+                     f"expected 'fp32', 'compressed', or a format name "
+                     f"({', '.join(n for n in FORMATS if n != 'fp32')})")
 
 
 def _check_wire_axis_free(axis, mesh, placement: Placement | None) -> None:

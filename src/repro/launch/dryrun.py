@@ -59,14 +59,17 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
                save_hlo: Path | None = None, moe_strategy: str | None = None,
                attn_chunk: int = 1024,
                placement: PT.Placement | None = None,
-               grad_wire: str | None = None, grad_accum: int = 1) -> dict:
+               grad_wire: str | None = None, grad_accum: int = 1,
+               wire_policy: "TR.WirePolicy | None" = None) -> dict:
     """Lower + compile one (arch × shape × mesh) cell.
 
     ``grad_wire`` (None keeps the historic implicit-psum lowering)
     selects an explicit gradient transport for train cells — on a
-    multi-pod mesh ``"compressed"`` lowers the SR-bf16 pod wire with its
-    error-feedback residuals in the TrainState; ``grad_accum`` lowers
-    the k-microbatch accumulation scan.
+    multi-pod mesh ``"compressed"`` (or any wire-format name, e.g.
+    ``"bf12"``/``"e4m3"``) lowers the SR pod wire with its
+    error-feedback residuals in the TrainState; ``wire_policy`` adds
+    the per-leaf fp32 keep; ``grad_accum`` lowers the k-microbatch
+    accumulation scan.
     """
     import dataclasses as _dc
     cfg = R.get_config(arch)
@@ -96,7 +99,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_sr"
         hint_dp, hint_dp_size = dp, dp_size
         if grad_wire is not None:
             transport = TR.make_transport(mesh=mesh, placement=placement,
-                                          pspecs=pspecs, wire=grad_wire)
+                                          pspecs=pspecs, wire=grad_wire,
+                                          wire_policy=wire_policy)
             res_shape = jax.eval_shape(transport.init_residuals, params_shape)
             if res_shape is not None:
                 res_in = _sds(res_shape, transport.residual_specs(pspecs),
@@ -238,11 +242,16 @@ def main():
                     help="FSDP placement: shard params + optimizer state "
                          "over the mesh's data axis")
     ap.add_argument("--grad-wire", default=None,
-                    choices=[None, "fp32", "compressed"],
+                    choices=[None, "fp32", "compressed", "bf16", "bf14",
+                             "bf12", "bf10", "fp16", "e5m2", "e4m3"],
                     help="explicit gradient transport for train cells "
                          "(compressed = SR-bf16 pod wire with error-"
-                         "feedback residuals); default keeps the "
-                         "implicit-psum lowering")
+                         "feedback residuals; a format name picks the "
+                         "wire grid, e.g. bf12 or e4m3); default keeps "
+                         "the implicit-psum lowering")
+    ap.add_argument("--wire-keep-fp32", default=None,
+                    help="per-leaf fp32 keep policy spec for a "
+                         "compressed wire (see launch.train)")
     ap.add_argument("--grad-accum", type=int, default=1,
                     help="microbatch accumulation factor for train cells")
     ap.add_argument("--tag", default="")
@@ -278,10 +287,12 @@ def main():
         try:
             placement = PT.default_placement(meshes[mesh_kind],
                                              fsdp=args.fsdp)
+            wp = (TR.WirePolicy.parse(args.wire_keep_fp32)
+                  if args.wire_keep_fp32 is not None else None)
             rec = lower_cell(arch, shape_name, meshes[mesh_kind],
                              policy_name=args.policy, moe_strategy=args.moe,
                              placement=placement, grad_wire=args.grad_wire,
-                             grad_accum=args.grad_accum,
+                             grad_accum=args.grad_accum, wire_policy=wp,
                              save_hlo=(out / f"{tag}.hlo") if args.save_hlo else None)
             path.write_text(json.dumps(rec, indent=1))
             r = rec["roofline"]

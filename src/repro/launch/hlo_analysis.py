@@ -86,11 +86,16 @@ class HloCost:
     #: operand bytes per (collective kind, operand dtype) — e.g.
     #: ``{"all-reduce": {"f32": ..., "bf16": ...}}``. Reported in the
     #: dry-run JSON artifacts to audit what each collective moves per
-    #: wire format. Caveat: this reads the *post-optimization* HLO, so
-    #: on backends that promote 16-bit all-reduce to f32 (the CPU test
-    #: backend does) a bf16 wire shows up under "f32" here — which is
-    #: why ``benchmarks/bench_grad_wire.py`` measures its wire bytes
-    #: from the pre-partitioning StableHLO instead.
+    #: wire format. Two caveats: (1) this reads the *post-optimization*
+    #: HLO, so on backends that promote 16-bit all-reduce to f32 (the
+    #: CPU test backend does) a bf16 wire shows up under "f32" here —
+    #: which is why ``benchmarks/bench_grad_wire.py`` measures its wire
+    #: bytes from the pre-partitioning StableHLO instead; (2) these are
+    #: *carrier*-dtype bytes — a simulated sub-bf16/fp8 wire (bf12,
+    #: e4m3, …) rides a bf16/f16 carrier on CPU, so its true
+    #: ``fmt.bits``-based payload is narrower than anything counted
+    #: here. ``CompressedWire.payload_bytes`` owns that accounting; the
+    #: bench reports both, with the carrier labeled explicitly.
     collective_bytes_by_dtype: dict = field(default_factory=dict)
     #: reduce-scatter → all-reduce+slice fallback sites (static count).
     #: The CPU SPMD partitioner lowers an implicit reduce-scatter (sharded

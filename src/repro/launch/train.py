@@ -19,10 +19,14 @@ compensation, SR residuals) over the data axes — a dedicated ``fsdp``
 axis when ``--fsdp-parallel > 1`` gives one, otherwise the ``data`` axis
 itself. ``--pods`` prepends a ``pod`` mesh axis (DCN data parallelism
 across ICI domains), and ``--grad-wire`` selects the gradient transport
-for it: ``fp32`` (explicit f32 mean over the pod axis) or ``compressed``
-(SR-to-bf16 wire with persistent error-feedback residuals — half the
-DCN bytes; without a pod axis the compressed wire rides the ``data``
-axis). ``--grad-accum=k`` scans k microbatches over one gathered
+for it: ``fp32`` (explicit f32 mean over the pod axis), ``compressed``
+(the historic SR-to-bf16 wire with persistent error-feedback residuals
+— half the DCN bytes), or any named wire format — ``bf16``/``bf14``/
+``bf12``/``bf10``/``fp16``/``e5m2``/``e4m3`` — for the sub-bf16/fp8
+regimes (without a pod axis the compressed wire rides the ``data``
+axis). ``--wire-keep-fp32`` adds the per-leaf keep policy: embeddings,
+norms, biases and tiny leaves ride fp32 while bulk matmul leaves take
+the low format. ``--grad-accum=k`` scans k microbatches over one gathered
 working copy before the single reduce + update. The TrainState sharding
 tree — error-feedback residuals included — is handed to
 ``run_training`` so an elastic checkpoint resume re-shards restored
@@ -74,9 +78,19 @@ def main():
                     help="pod mesh axis size: DP across ICI domains, "
                          "gradient reduce over (virtual) DCN")
     ap.add_argument("--grad-wire", default="fp32",
-                    choices=["fp32", "compressed"],
-                    help="gradient transport on the wire axis: fp32 mean "
-                         "or SR-compressed bf16 with error feedback")
+                    choices=["fp32", "compressed", "bf16", "bf14", "bf12",
+                             "bf10", "fp16", "e5m2", "e4m3"],
+                    help="gradient transport on the wire axis: fp32 mean, "
+                         "or an SR-compressed wire with error feedback at "
+                         "the named format ('compressed' = bf16, the "
+                         "historic wire; e5m2/e4m3 are fp8, clamped at "
+                         "max_finite)")
+    ap.add_argument("--wire-keep-fp32", default=None,
+                    help="per-leaf fp32 keep on a compressed wire: "
+                         "'default' (embeddings/norms/biases/scales and "
+                         "leaves <2048 elems ride fp32), 'none', or a "
+                         "comma list of name patterns with an optional "
+                         "size threshold, e.g. '4096,embed,norm'")
     ap.add_argument("--grad-accum", type=int, default=1,
                     help="microbatches scanned per step over one gathered "
                          "working copy (single reduce + update)")
@@ -128,6 +142,8 @@ def main():
                                          mesh=mesh, pspecs=pspecs)
         return adamw(policy, b2=0.997, weight_decay=0.01)
 
+    wire_policy = (TR.WirePolicy.parse(args.wire_keep_fp32)
+                   if args.wire_keep_fp32 is not None else None)
     dp, mp, fp, pods = (args.data_parallel, args.model_parallel,
                         args.fsdp_parallel, args.pods)
     if MH.active() and dp * mp * fp * pods == 1:
@@ -142,7 +158,8 @@ def main():
         pspecs = PT.param_specs(params, cfg, mesh, placement)
         opt = make_opt(mesh, pspecs)
         transport = TR.make_transport(mesh=mesh, placement=placement,
-                                      pspecs=pspecs, wire=args.grad_wire)
+                                      pspecs=pspecs, wire=args.grad_wire,
+                                      wire_policy=wire_policy)
         state = make_train_state(params, opt, transport=transport)
         shardings = F.train_state_shardings(state, cfg, mesh, placement,
                                             transport=transport)
@@ -154,19 +171,21 @@ def main():
         hint_axes, hint_size = transport.hint_axes(mesh)
         with mesh, activation_sharding(hint_axes, hint_size,
                                        PT.MODEL_AXIS, mp):
-            _run(state, step_fn, cfg, args, state_shardings=shardings)
+            _run(state, step_fn, cfg, args, transport,
+                 state_shardings=shardings)
     else:
         opt = make_opt()
-        transport = TR.make_transport(wire=args.grad_wire)
+        transport = TR.make_transport(wire=args.grad_wire,
+                                      wire_policy=wire_policy)
         state = make_train_state(params, opt, transport=transport)
         step_fn = make_train_step(cfg, policy, opt, lr_schedule,
                                   transport=transport,
                                   grad_accum=args.grad_accum,
                                   attn_chunk=min(1024, args.seq))
-        _run(state, step_fn, cfg, args)
+        _run(state, step_fn, cfg, args, transport)
 
 
-def _run(state, step_fn, cfg, args, state_shardings=None):
+def _run(state, step_fn, cfg, args, transport, state_shardings=None):
     def batches(start_step):
         # step-keyed stream: a resume (or spike rollback) at step k
         # continues with batch k — never replays batches 0..k-1
@@ -181,7 +200,8 @@ def _run(state, step_fn, cfg, args, state_shardings=None):
                         spike_factor=args.spike_factor,
                         spike_patience=args.spike_patience,
                         max_rollbacks=args.max_rollbacks,
-                        preempt_poll_every=args.preempt_poll),
+                        preempt_poll_every=args.preempt_poll,
+                        wire_format=getattr(transport, "wire_format", None)),
         log=log, state_shardings=state_shardings)
     last = info["history"][-1] if info["history"] else {}
     log(f"[train] done at step {int(jax.device_get(state.step))}; "

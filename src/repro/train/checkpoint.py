@@ -393,10 +393,15 @@ class CheckpointManager:
 
     def __init__(self, directory: str | Path, *, every_steps: int = 100,
                  keep_n: int = 3, async_saves: bool = False,
-                 max_pending: int = 2):
+                 max_pending: int = 2, extra: dict | None = None):
         self.directory = Path(directory)
         self.every_steps = every_steps
         self.keep_n = keep_n
+        # run-level metadata stamped into every manifest this manager
+        # writes (e.g. the gradient-wire format, so a resume under a
+        # different --grad-wire can detect stale residuals whose shapes
+        # alone look compatible)
+        self.extra = dict(extra) if extra else {}
         self._async = (AsyncCheckpointer(max_pending=max_pending)
                        if async_saves else None)
 
@@ -405,8 +410,9 @@ class CheckpointManager:
                           and step > 0)):
             return None
         if self._async is None:
-            return save(self.directory, step, tree, keep_n=self.keep_n)
-        snap = snapshot(tree, step)
+            return save(self.directory, step, tree, keep_n=self.keep_n,
+                        extra=self.extra)
+        snap = snapshot(tree, step, extra=self.extra)
         final = self.directory / f"step_{step:09d}"
         if _is_primary():
             self._async.submit(self.directory, snap, self.keep_n)

@@ -102,7 +102,7 @@ def _agreed_restore_step(mgr: CheckpointManager,
 
 
 def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log,
-             *, step: int | None = None):
+             *, step: int | None = None, wire_format: str | None = None):
     """Elastic restore, tolerant of gradient-wire residual layout drift
     in every direction a restart can change the wire:
 
@@ -112,7 +112,16 @@ def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log,
       (pod-axis resize): drop the stale buffers unread (``skip`` — they
       can be parameter-sized), zero-init at the current shape;
     * checkpoint with residuals → stateless-transport run (wire
-      downgraded to fp32): drop the stored buffers unread.
+      downgraded to fp32): drop the stored buffers unread;
+    * checkpoint with shape-compatible residuals but a *different wire
+      format* (``--grad-wire=bf16`` checkpoint resumed under ``bf12``,
+      or a changed keep policy): residual shapes are format-independent,
+      so the mismatch is invisible to shape checks — it is detected from
+      the ``wire_format`` the manager stamps into the manifest, and the
+      stale buffers (quantization error on the *old* grid, wrong to
+      re-inject on the new one) are dropped unread and zero-inited.
+      Checkpoints predating the stamp restore as before (bf16 ↔
+      ``compressed`` is the only format that ever wrote them).
 
     Zero-init is cheap because the buffers hold only last-step
     quantization error — one uncompensated step. Every fallback is gated
@@ -160,6 +169,18 @@ def _restore(mgr: CheckpointManager, state: TrainState, state_shardings, log,
                 state, shardings=sh, skip=range(n_bare, n_state), step=step)
             log("[loop] wire replica count changed since checkpoint; "
                 "zero-initialized error-feedback buffers")
+            return restored._replace(wire_residuals=residuals), at
+        stored_fmt = (man.get("extra") or {}).get("wire_format")
+        if (n_ckpt == n_state and stored == ours and stored_as(state)
+                and None not in (stored_fmt, wire_format)
+                and stored_fmt != wire_format):
+            sh = (state_shardings._replace(wire_residuals=none_like(residuals))
+                  if state_shardings is not None else None)
+            restored, at = mgr.restore_latest(
+                state, shardings=sh, skip=range(n_bare, n_state), step=step)
+            log(f"[loop] gradient-wire format changed since checkpoint "
+                f"({stored_fmt} -> {wire_format}); zero-initialized "
+                f"error-feedback buffers")
             return restored._replace(wire_residuals=residuals), at
     elif n_ckpt == n_state + n_params:
         # checkpoint may carry residuals this (stateless) transport has
@@ -214,6 +235,13 @@ class TrainLoopConfig:
     # steps — keep it small relative to the preemption grace period.
     # Single-process runs still react on the very next step boundary.
     preempt_poll_every: int = 10
+    # Identity of the gradient-wire numerics (CompressedWire.wire_format,
+    # e.g. "bf16" or "bf12+keep<2048|embed,norm,bias,scale"). Stamped
+    # into checkpoint manifests and compared on restore: a resume under a
+    # different format zero-inits the error-feedback residuals instead of
+    # re-injecting quantization error measured on the old grid. None
+    # (stateless transports) disables both the stamp and the check.
+    wire_format: str | None = None
 
 
 def run_training(state: TrainState, train_step: Callable, batches: Batches,
@@ -244,6 +272,8 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                             keep_n=cfg.keep_n,
                             async_saves=cfg.async_saves,
                             max_pending=cfg.max_pending_saves,
+                            extra=({"wire_format": cfg.wire_format}
+                                   if cfg.wire_format else None),
                             ) if cfg.ckpt_dir else None
     batches_fn = batches if callable(batches) else None
     if cfg.spike_factor is not None:
@@ -263,7 +293,7 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
         at_step = _agreed_restore_step(mgr, multiproc)
         if at_step is not None:
             state, at = _restore(mgr, state, state_shardings, log,
-                                 step=at_step)
+                                 step=at_step, wire_format=cfg.wire_format)
             log(f"[loop] resumed from checkpoint at step {at}")
             if multiproc:
                 _barrier("repro:loop:restored")
@@ -373,7 +403,8 @@ def run_training(state: TrainState, train_step: Callable, batches: Batches,
                             f"loss diverged at step {step} after "
                             f"{rollbacks} rollbacks; giving up")
                     state, at = _restore(mgr, state, state_shardings, log,
-                                         step=at_step)
+                                         step=at_step,
+                                         wire_format=cfg.wire_format)
                     if multiproc:
                         _barrier("repro:loop:rolled-back")
                     rollbacks += 1

@@ -292,3 +292,85 @@ class TestAsync:
                                  async_saves=True) as mgr:
             mgr.maybe_save(1, _tree())
             assert mgr.has_checkpoint()   # drains first — no race
+
+
+# ---------------------------------------------------------------------------
+# gradient-wire format drift (manifest `extra` stamp → residual zero-init)
+# ---------------------------------------------------------------------------
+
+class TestWireFormatDrift:
+    """Residual buffers are shape-identical across wire formats, so a
+    ``--grad-wire`` change between save and resume is invisible to the
+    shape checks — it must be caught from the ``wire_format`` stamp the
+    manager writes into the manifest ``extra`` dict, and the stale
+    buffers (quantization error on the *old* grid) dropped unread."""
+
+    def _state(self, res_fill=0.125):
+        from repro.train.train_state import TrainState
+        params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+        opt = {"m": jnp.full((3, 4), 2.0, jnp.float32)}
+        res = {"w": jnp.full((1, 3, 4), res_fill, jnp.float32)}
+        return TrainState(jnp.int32(5), params, opt, res)
+
+    def _save(self, tmp_path, stamp):
+        mgr = C.CheckpointManager(
+            tmp_path, every_steps=1,
+            extra=({"wire_format": stamp} if stamp else None))
+        assert mgr.maybe_save(5, self._state(res_fill=0.125),
+                              force=True) is not None
+
+    def _restore(self, tmp_path, wire_format):
+        from repro.train.loop import _restore
+        msgs = []
+        template = self._state(res_fill=0.0)     # fresh zero buffers
+        restored, at = _restore(
+            C.CheckpointManager(tmp_path, every_steps=1), template, None,
+            msgs.append, wire_format=wire_format)
+        assert at == 5
+        return restored, msgs
+
+    def test_manager_stamps_manifest_extra(self, tmp_path):
+        self._save(tmp_path, "bf16")
+        assert C.manifest(tmp_path)["extra"] == {"wire_format": "bf16"}
+
+    def test_format_change_zero_inits_residuals(self, tmp_path):
+        self._save(tmp_path, "bf16")
+        restored, msgs = self._restore(tmp_path, "bf12")
+        # params/opt restore bit-exact; the stale bf16-grid residuals
+        # are dropped and the fresh zero buffers kept
+        assert bool(jnp.all(restored.params["w"]
+                            == self._state().params["w"]))
+        assert bool(jnp.all(restored.opt_state["m"] == 2.0))
+        assert not np.asarray(restored.wire_residuals["w"]).any()
+        assert any("format changed" in m and "bf16 -> bf12" in m
+                   for m in msgs), msgs
+
+    def test_policy_change_is_format_drift_too(self, tmp_path):
+        # the stamp includes the keep policy (CompressedWire.wire_format),
+        # so a policy-only change also refuses the stale buffers
+        self._save(tmp_path, "bf12+keep<2048|embed")
+        restored, msgs = self._restore(tmp_path, "bf12")
+        assert not np.asarray(restored.wire_residuals["w"]).any()
+        assert any("format changed" in m for m in msgs), msgs
+
+    def test_same_format_restores_residuals(self, tmp_path):
+        self._save(tmp_path, "bf12")
+        restored, msgs = self._restore(tmp_path, "bf12")
+        assert bool(jnp.all(restored.wire_residuals["w"] == 0.125))
+        assert msgs == []
+
+    def test_unstamped_checkpoint_restores_residuals(self, tmp_path):
+        # pre-stamp checkpoints: bf16 (== "compressed") was the only
+        # format that ever wrote residuals — restore them as before
+        self._save(tmp_path, None)
+        restored, msgs = self._restore(tmp_path, "bf16")
+        assert bool(jnp.all(restored.wire_residuals["w"] == 0.125))
+        assert msgs == []
+
+    def test_no_current_format_restores_residuals(self, tmp_path):
+        # a stamped checkpoint resumed by a caller that does not declare
+        # a wire format: nothing to compare against, keep the buffers
+        self._save(tmp_path, "bf16")
+        restored, msgs = self._restore(tmp_path, None)
+        assert bool(jnp.all(restored.wire_residuals["w"] == 0.125))
+        assert msgs == []

@@ -22,6 +22,7 @@ from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.core import get_policy
+from repro.core.formats import FORMATS
 from repro.dist import partition as PT
 from repro.dist import transport as T
 from repro.models import registry as R
@@ -49,13 +50,18 @@ class _SpecMesh:
 # ---------------------------------------------------------------------------
 
 class TestErrorFeedback:
-    @settings(max_examples=20, deadline=None)
-    @given(st.floats(min_value=0.01, max_value=100.0, width=32),
+    @settings(max_examples=40, deadline=None)
+    @given(st.sampled_from(["bf16", "bf14", "bf12", "e5m2", "e4m3"]),
+           st.floats(min_value=0.01, max_value=100.0, width=32),
            st.integers(min_value=0, max_value=2**31 - 1))
-    def test_residuals_telescope(self, scale, seed):
-        """Σ_t q_t == Σ_t g_t − r_T: the quantized stream transmits the
-        true gradient sum exactly up to one final residual (the identity
-        that makes error feedback 'compensation, not accumulation')."""
+    def test_residuals_telescope(self, fname, scale, seed):
+        """Σ_t q_t == Σ_t g_t − r_T, for EVERY wire format: the quantized
+        stream transmits the true gradient sum exactly up to one final
+        residual (the identity that makes error feedback 'compensation,
+        not accumulation'). Format-generic by construction — the residual
+        is computed against whatever landed on the wire, including values
+        the fp8 formats clamped at max_finite."""
+        fmt = FORMATS[fname]
         rng = np.random.default_rng(seed)
         steps = 8
         g_seq = [jnp.asarray(rng.normal(0, scale, 64), jnp.float32)
@@ -63,13 +69,59 @@ class TestErrorFeedback:
         r = jnp.zeros(64, jnp.float32)
         q_sum = jnp.zeros(64, jnp.float32)
         for t, g in enumerate(g_seq):
-            q, r = compress_leaf(g, r, jax.random.PRNGKey(seed + t))
+            q, r = compress_leaf(g, r, jax.random.PRNGKey(seed + t), fmt)
             q_sum = q_sum + q.astype(jnp.float32)
         g_sum = sum(g_seq[1:], g_seq[0])
         lhs = np.asarray(q_sum + r)
         rhs = np.asarray(g_sum)
         tol = 1e-4 * max(float(jnp.max(jnp.abs(g_sum))), scale)
         assert float(np.max(np.abs(lhs - rhs))) <= tol
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_bf16_wire_bit_parity(self, seed):
+        """fmt=BF16 (and the default) is bit-identical to the original
+        hard-coded SR-bf16 wire: same key, same noise draw, same bits —
+        the regression pin for the format-generic refactor."""
+        from repro.core.formats import stochastic_round_bf16
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(0, 3.0, 256), jnp.float32)
+        r = jnp.asarray(rng.normal(0, 2.0 ** -9, 256), jnp.float32)
+        key = jax.random.PRNGKey(seed)
+        old = stochastic_round_bf16(g + r, key)
+        q_default, _ = compress_leaf(g, r, key)
+        q_explicit, _ = compress_leaf(g, r, key, FORMATS["bf16"])
+        for q in (q_default, q_explicit):
+            assert q.dtype == jnp.bfloat16
+            np.testing.assert_array_equal(
+                np.asarray(old).view(np.uint16),
+                np.asarray(q).view(np.uint16))
+
+    def test_fp32_leaf_is_lossless_passthrough(self):
+        """The keep-policy leaf format: nothing quantized, residual zero
+        (error feedback on a lossless leaf would only re-inject stale
+        state)."""
+        g = jnp.asarray([1.0 + 2.0 ** -20, -3.7, 0.0], jnp.float32)
+        r0 = jnp.asarray([0.125, -0.25, 2.0 ** -24], jnp.float32)
+        q, r1 = compress_leaf(g, r0, jax.random.PRNGKey(0), FORMATS["fp32"])
+        assert q.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(g + r0))
+        assert not np.asarray(r1).any()
+
+    def test_fp8_wire_clamps_overflow(self):
+        """An overflowing gradient saturates at max_finite on the wire
+        (no ±inf in the fp8 grids) and the clamped-away mass lands in
+        the residual — overflow-safe, not silently lost."""
+        fmt = FORMATS["e4m3"]
+        g = jnp.asarray([1.0e6, -1.0e6, 250.0, 1.0], jnp.float32)
+        r0 = jnp.zeros(4, jnp.float32)
+        q, r1 = compress_leaf(g, r0, jax.random.PRNGKey(0), fmt)
+        qf = np.asarray(q, np.float64)
+        assert np.isfinite(qf).all()
+        assert abs(qf).max() <= fmt.max_finite
+        assert qf[0] == fmt.max_finite and qf[1] == -fmt.max_finite
+        np.testing.assert_allclose(qf + np.asarray(r1), np.asarray(g),
+                                   rtol=0, atol=0)
 
     @settings(max_examples=10, deadline=None)
     @given(st.integers(min_value=0, max_value=2**31 - 1))
@@ -174,6 +226,88 @@ class TestMakeTransport:
         tr = T.make_transport(wire="compressed")
         with pytest.raises(ValueError, match="residuals"):
             tr.reduce({"w": jnp.ones(3)}, None, jax.random.PRNGKey(0))
+
+    @pytest.mark.parametrize(
+        "fname", ["bf16", "bf14", "bf12", "bf10", "fp16", "e5m2", "e4m3"])
+    def test_named_format_selects_compressed_wire(self, fname):
+        """`wire=<format name>` is the format-generic spelling; the
+        legacy `wire="compressed"` alias stays bf16."""
+        tr = T.make_transport(wire=fname)
+        assert isinstance(tr, T.CompressedWire)
+        assert tr.fmt.name == fname and tr.wire_format == fname
+
+    def test_compressed_alias_is_bf16(self):
+        assert T.make_transport(wire="compressed").fmt.name == "bf16"
+
+    def test_fp32_fmt_rejected_on_compressed_wire(self):
+        # the lossless wire is Fp32Psum, not a degenerate CompressedWire
+        with pytest.raises(ValueError, match="fp32"):
+            T.CompressedWire(fmt=FORMATS["fp32"])
+
+
+# ---------------------------------------------------------------------------
+# per-leaf keep policy + payload accounting
+# ---------------------------------------------------------------------------
+
+class TestWirePolicy:
+    def test_parse_specs(self):
+        default = T.WirePolicy.parse("default")
+        assert default == T.WirePolicy() == T.WirePolicy.parse("")
+        none = T.WirePolicy.parse("none")
+        assert none.keep_below == 0 and none.keep_patterns == ()
+        custom = T.WirePolicy.parse("4096,embed,lm_head")
+        assert custom.keep_below == 4096
+        assert custom.keep_patterns == ("embed", "lm_head")
+
+    def test_format_for_routes_leaves(self):
+        pol = T.WirePolicy()
+        low = FORMATS["bf12"]
+        from repro.core.formats import FP32
+        # bulk matmul leaf → low format
+        assert pol.format_for("['layers'][0]['mlp']['w']", 10**6, low) is low
+        # pattern match (case-insensitive, anywhere in the keystr) → fp32
+        assert pol.format_for("['Embed']['embedding']", 10**6, low) is FP32
+        assert pol.format_for("['ln']['scale']", 10**6, low) is FP32
+        # small leaf → fp32 regardless of name
+        assert pol.format_for("['w']", 2047, low) is FP32
+        # the "none" policy compresses everything
+        assert T.WirePolicy.parse("none").format_for(
+            "['embed']", 4, low) is low
+
+    def test_leaf_formats_and_wire_format_label(self):
+        tr = T.make_transport(wire="bf12", wire_policy=T.WirePolicy())
+        tree = {"embed": jnp.zeros((64, 64)),     # pattern keep
+                "w": jnp.zeros((64, 64)),          # bulk → bf12
+                "b": jnp.zeros((64,))}             # < keep_below → keep
+        fmts = dict(zip(sorted(tree), tr.leaf_formats(tree)))
+        assert fmts["embed"].name == "fp32"
+        assert fmts["w"].name == "bf12"
+        assert fmts["b"].name == "fp32"
+        assert tr.wire_format.startswith("bf12+keep<2048|")
+
+    def test_leaf_formats_divides_out_replica_dim(self):
+        """Stacked residual leaves carry a leading (wire_replicas,) dim;
+        size-based keeps must be judged on the per-replica leaf size."""
+        mesh = _SpecMesh(pod=2, data=2, model=2)
+        tr = T.make_transport(mesh=mesh, wire="bf12",
+                              wire_policy=T.WirePolicy(keep_below=2048))
+        flat = {"w": jnp.zeros((2, 1500))}    # 3000 global, 1500 per replica
+        assert tr.leaf_formats(flat, stacked=True)[0].name == "fp32"
+        assert tr.leaf_formats({"w": jnp.zeros((2, 3000))},
+                               stacked=True)[0].name == "bf12"
+
+    def test_payload_bytes_accounting(self):
+        """Accounted wire bytes are fmt.bits-based (the honest payload),
+        not carrier-dtype-based — bf12 counts 12 bits/element even
+        though its CPU carrier is 16-bit bfloat16."""
+        params = {"w": jnp.zeros((100, 100)), "bias": jnp.zeros((100,))}
+        tr = T.make_transport(wire="bf12")
+        assert tr.payload_bytes(params) == (10_100 * 12 + 7) // 8
+        trp = T.make_transport(wire="bf12", wire_policy=T.WirePolicy())
+        # bias rides fp32 under the default policy
+        assert trp.payload_bytes(params) == (10_000 * 12 + 100 * 32 + 7) // 8
+        tr8 = T.make_transport(wire="e4m3")
+        assert tr8.payload_bytes(params) == 10_100  # 8 bits/element
 
 
 # ---------------------------------------------------------------------------
