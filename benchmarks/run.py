@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (shared convention).
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--only fig2,table4]
-[--profile [DIR]]``
+[--profile [DIR]] [--smoke]``
+
+``--smoke`` asks each section for its shrunken CI variant; sections
+whose ``run()`` takes no ``smoke`` parameter run at full size as before.
 
 ``--profile`` wraps every section in a :class:`repro.profile.
 ProfileSession` and writes one ``repro.profile/v1`` JSON artifact per
@@ -15,6 +18,7 @@ count. Validate artifacts with ``python tools/check_profile.py DIR/*.json``.
 from __future__ import annotations
 
 import argparse
+import inspect
 import os
 import sys
 import time
@@ -46,6 +50,8 @@ def main() -> None:
                     metavar="DIR",
                     help="emit one repro.profile/v1 JSON per section "
                          "into DIR (default: profiles/)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs for sections that support it")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
@@ -59,8 +65,11 @@ def main() -> None:
             from repro.profile import ProfileSession
             sess = ProfileSession(name)
             sess.__enter__()
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            mod.run()
+            mod.run(**kwargs)
         except Exception as e:  # keep the suite going; report the failure
             if sess is not None:
                 sess.error = f"{type(e).__name__}: {e}"

@@ -251,7 +251,12 @@ def cache_specs(cache: PyTree, cfg, mesh) -> PyTree:
     Mamba ``{"conv": (…, N, W−1, d_inner), "h": (…, N, d_inner, N_ssm)}``
     and RG-LRU ``{"conv": (…, N, W−1, W), "h": (…, N, W)}``, each
     optionally stacked under a leading scanned-layer dim (see
-    :data:`STACKED_CACHE_ROOTS`).
+    :data:`STACKED_CACHE_ROOTS`). Paged KV leaves
+    (``k_pages``/``v_pages`` ``(…, R, P, H_kv, hd)``, ``pos_pages``
+    ``(…, R, P)``) need no extra rules: their leading dim is the physical
+    *page-row* axis, which the slot rule shards over the data axes when
+    divisible (the pool pads ``R`` to guarantee it), and the erank-4 rule
+    puts the head dim on ``model`` exactly as for contiguous KV.
 
     The leading cache dimension ``N`` is the *slot* axis: under lock-step
     decode (``repro.serve.decode.generate``) it is the request batch; under
@@ -294,18 +299,36 @@ def cache_specs(cache: PyTree, cfg, mesh) -> PyTree:
     return jax.tree_util.tree_map_with_path(spec, cache)
 
 
-def serve_input_specs(n_slots: int, mesh) -> dict[str, P]:
+def serve_input_specs(n_slots: int, mesh, *, paged: bool = False,
+                      n_rows: int | None = None,
+                      chunk: int = 1) -> dict[str, P]:
     """Specs for the slot-indexed serve-step inputs (see
     :func:`repro.train.step.make_serve_step`).
 
-    All four inputs lead with the slot axis and co-shard with the cache
-    pool's slot dim over every data axis: ``token (N, 1) i32``,
+    The base inputs lead with the slot axis and co-shard with the cache
+    pool's slot dim over every data axis: ``token (N, C) i32``,
     ``pos (N,) i32``, ``active (N,) bool``, ``reset (N,) bool``. When
     ``n_slots`` does not divide the data-parallel size everything
     replicates — matching :func:`cache_specs`' fallback so token and
     cache never disagree on slot placement.
+
+    ``paged=True`` adds ``block_table (N, n_blocks) i32`` (slot-leading,
+    like token) and ``page_reset (R,) bool``, which co-shards with the
+    paged pool's *page-row* dim (``n_rows`` is padded to a multiple of
+    the dp size by :class:`repro.serve.paged.PagedCachePool`, matching
+    ``cache_specs``' divisibility rule on the page dim). ``chunk > 1``
+    adds ``n_tok (N,) i32`` (real tokens per lane this step).
     """
     dp = dp_axes(mesh)
-    slot = dp if (dp_size(mesh) > 1 and n_slots % dp_size(mesh) == 0) else None
-    return {"token": P(slot, None), "pos": P(slot),
-            "active": P(slot), "reset": P(slot)}
+    n = dp_size(mesh)
+    slot = dp if (n > 1 and n_slots % n == 0) else None
+    specs = {"token": P(slot, None), "pos": P(slot),
+             "active": P(slot), "reset": P(slot)}
+    if paged:
+        page = dp if (n > 1 and n_rows is not None and n_rows % n == 0) \
+            else None
+        specs["block_table"] = P(slot, None)
+        specs["page_reset"] = P(page)
+    if chunk > 1:
+        specs["n_tok"] = P(slot)
+    return specs

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_decode_attention", "decode_attention_kernel"]
+__all__ = ["fused_decode_attention", "decode_attention_kernel",
+           "fused_paged_decode_attention", "paged_decode_attention_kernel"]
 
 NEG_INF = -1e30
 
@@ -95,4 +96,95 @@ def fused_decode_attention(q, k_cache, v_cache, k_pos, q_pos, *,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), jnp.float32),
         interpret=interpret,
     )(qg, k_cache, v_cache, k_pos, qp)
+    return out.reshape(B, 1, Hq, D)
+
+
+def paged_decode_attention_kernel(q_ref, kp_ref, vp_ref, pp_ref, table_ref,
+                                  qpos_ref, out_ref, *, scale: float,
+                                  n_blocks: int, window, softcap, p_dtype):
+    """One lane against the paged pool.
+
+    q (1,Hkv,G,D); kp/vp (R,P,Hkv,D) and pp (R,P) are the *full* pool
+    (block index maps pin them, so every lane reads the same blocks);
+    table (1,n_blocks) maps the lane's logical blocks to pool rows;
+    qpos (1,1). The lane's KV view is gathered row-by-row with dynamic
+    loads — ``n_blocks`` is static, so the gather unrolls — and then
+    runs the exact score/mask/softmax/PV pipeline of
+    :func:`decode_attention_kernel`: token at logical position p sits at
+    view index p, so the result is bitwise-identical to the contiguous
+    kernel on an equal-length cache.
+    """
+    q_pos = qpos_ref[0, 0]
+
+    @pl.when(q_pos >= 0)
+    def _active():
+        q = q_ref[0]                                   # (Hkv, G, D)
+        ks, vs, ps = [], [], []
+        for b in range(n_blocks):
+            pg = table_ref[0, b]
+            ks.append(pl.load(kp_ref, (pl.ds(pg, 1),) + (slice(None),) * 3))
+            vs.append(pl.load(vp_ref, (pl.ds(pg, 1),) + (slice(None),) * 3))
+            ps.append(pl.load(pp_ref, (pl.ds(pg, 1), slice(None))))
+        k = jnp.concatenate(ks, axis=1)[0]             # (n_blocks·P, Hkv, D)
+        v = jnp.concatenate(vs, axis=1)[0]
+        k_pos = jnp.concatenate(ps, axis=1)[0]         # (n_blocks·P,)
+        s = jnp.einsum("hgd,khd->hgk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = (k_pos[None, None, :] <= q_pos) & (k_pos[None, None, :] >= 0)
+        if window is not None:
+            ok &= q_pos - k_pos[None, None, :] < window
+        s = jnp.where(ok, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out_ref[0] = jnp.einsum("hgk,khd->hgd", p.astype(p_dtype), v,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(q_pos < 0)
+    def _parked():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def fused_paged_decode_attention(q, k_pages, v_pages, pos_pages, block_table,
+                                 q_pos, *, window=None, softcap=None,
+                                 p_dtype=jnp.bfloat16,
+                                 interpret: bool | None = None):
+    """q: (B,1,Hq,D); pools: (R,P,Hkv,D) + (R,P) i32; block_table:
+    (B,n_blocks) i32 (null rows' positions are −1, so they mask out);
+    q_pos: (B,) i32 (−1 ⇒ parked lane). Returns f32 (B,1,Hq,D) —
+    unrounded, the caller applies the policy's single output rounding.
+
+    The pool rides into the kernel as one whole-array block per operand
+    (the lane's pages are gathered in-kernel via the table). That is the
+    right CI-grade shape — interpret mode and single-device TPU smoke
+    share it — while a TPU-native variant would stream pages by scalar
+    prefetch (``PrefetchScalarGridSpec``); see docs/serving.md and the
+    ROADMAP TPU item.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, Hq, D = q.shape
+    R, P, Hkv, _ = k_pages.shape
+    n_blocks = block_table.shape[1]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    qp = q_pos.reshape(B, 1).astype(jnp.int32)
+    scale = 1.0 / (D ** 0.5)
+
+    q_bs = pl.BlockSpec((1, Hkv, group, D), lambda i: (i, 0, 0, 0))
+    out = pl.pallas_call(
+        partial(paged_decode_attention_kernel, scale=scale,
+                n_blocks=n_blocks, window=window, softcap=softcap,
+                p_dtype=p_dtype),
+        grid=(B,),
+        in_specs=[q_bs,
+                  pl.BlockSpec((R, P, Hkv, D), lambda i: (0, 0, 0, 0)),
+                  pl.BlockSpec((R, P, Hkv, D), lambda i: (0, 0, 0, 0)),
+                  pl.BlockSpec((R, P), lambda i: (0, 0)),
+                  pl.BlockSpec((1, n_blocks), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=q_bs,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), jnp.float32),
+        interpret=interpret,
+    )(qg, k_pages, v_pages, pos_pages, block_table, qp)
     return out.reshape(B, 1, Hq, D)

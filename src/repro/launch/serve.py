@@ -9,6 +9,12 @@ lengths, then prints throughput + slot-utilization stats.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --policy bf16_sr_kahan --slots 16 --rate 0.5 --requests 64
 
+Paged KV pool + chunked prefill (token-granular memory; more lanes per
+byte on mixed-length traffic, bounded TTFT on long prompts):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --paged --page-size 16 --slots 16 --n-pages 24 --prefill-chunk 8
+
 On a mesh (8 virtual devices: 4 data × 2 model, KV pool sharded on both):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -69,6 +75,20 @@ def main():
                     help="decode attention via the fused Pallas kernel "
                          "(one launch per lane, parked lanes skipped "
                          "in-kernel); token parity with the generic path")
+    ap.add_argument("--paged", action="store_true",
+                    help="back full-context attention layers with the "
+                         "paged KV pool (token-granular allocation via a "
+                         "per-lane block table); token parity with the "
+                         "contiguous pool")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="pool pages (default slots*ceil(max_len/page): "
+                         "byte parity with the contiguous pool; lower it "
+                         "to oversubscribe lanes per byte)")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens admitted per engine iteration "
+                         "(>1 = chunked prefill, interleaved with decode)")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -83,7 +103,9 @@ def main():
                              ("data", "model"))
     engine = Engine(params, cfg, policy, n_slots=args.slots,
                     max_len=args.max_len, mesh=mesh, eos_id=args.eos_id,
-                    fused_decode=args.fused_decode)
+                    fused_decode=args.fused_decode, paged=args.paged,
+                    page_size=args.page_size, n_pages=args.n_pages,
+                    prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(args.seed)
     # every request must fit the pool: clamp generation lengths to what the
@@ -97,18 +119,22 @@ def main():
                               prompt_lens=tuple(args.prompt_lens),
                               gen_lens=(min(args.gen_lens[0], hi), hi),
                               vocab=cfg.vocab)
+    paged_desc = (f"paged page={args.page_size} pages={engine.pool.n_pages} "
+                  if args.paged else "contiguous ")
     print(f"[serve] {args.arch} policy={policy.name} slots={args.slots} "
           f"max_len={args.max_len} kv_dtype={np.dtype(engine.pool.dtype).name} "
-          f"pool={engine.pool.nbytes() / 2**20:.1f} MiB "
+          f"{paged_desc}pool={engine.pool.nbytes() / 2**20:.1f} MiB "
+          f"chunk={args.prefill_chunk} "
           f"mesh={'x'.join(map(str, mesh.devices.shape)) if mesh else 'none'}")
 
     t0 = time.time()
     completions, queued = [], 0
-    latencies = []
+    latencies, ttfts = [], []
+    arrivals: dict[int, int] = {}
     while queued < len(stream) or engine.has_work():
         while queued < len(stream) and stream[queued][0] <= engine.stats.steps:
-            _, prompt, gen = stream[queued]
-            engine.submit(prompt, gen)
+            arrive, prompt, gen = stream[queued]
+            arrivals[engine.submit(prompt, gen)] = arrive
             queued += 1
         if not engine.has_work():      # open-loop gap: idle until next arrival
             engine.stats.steps += 1
@@ -117,19 +143,27 @@ def main():
         for c in engine.step():
             completions.append(c)
             latencies.append(c.finished_step - c.admitted_step)
+            ttfts.append(c.first_token_step - arrivals[c.rid])
     dt = time.time() - t0
 
     st = engine.stats
     print(f"[serve] {st.finished}/{args.requests} finished in {st.steps} "
           f"steps ({dt:.2f}s incl. compile)")
     print(f"[serve] {st.tokens_generated} tokens generated → "
-          f"{st.tokens_generated / dt:.1f} tok/s; slot utilization "
-          f"{st.utilization:.1%} (prefill share "
+          f"{st.tokens_generated / dt:.1f} tok/s; KV utilization "
+          f"{st.utilization:.1%} (live tokens / pool capacity); lane "
+          f"occupancy {st.lane_occupancy:.1%} (prefill share "
           f"{st.prefill_slot_steps / max(st.active_slot_steps, 1):.1%})")
+    if args.paged:
+        print(f"[serve] pages: {engine.pool.n_pages} total, "
+              f"{st.kv_pages_live} live at drain; "
+              f"{st.preemptions} preemptions")
     if latencies:
-        lat = np.asarray(latencies)
+        lat, tf = np.asarray(latencies), np.asarray(ttfts)
         print(f"[serve] latency (engine steps): p50={np.percentile(lat, 50):.0f} "
-              f"p95={np.percentile(lat, 95):.0f} max={lat.max()}")
+              f"p95={np.percentile(lat, 95):.0f} max={lat.max()}; "
+              f"TTFT p50={np.percentile(tf, 50):.0f} "
+              f"p99={np.percentile(tf, 99):.0f}")
     for c in completions[:4]:
         print(f"  rid={c.rid} {c.finish_reason:6s} prompt={c.prompt.size:3d} "
               f"gen={c.tokens.size:3d} tokens={c.tokens[:8].tolist()}…")

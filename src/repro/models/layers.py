@@ -290,40 +290,69 @@ def flash_attention(qa: QArith, q, k, v, *, q_offset=0, causal=True,
 
 def decode_attention(qa: QArith, q, k_cache, v_cache, k_pos, *, q_pos,
                      window=None, softcap=None):
-    """Single-token attention against a (possibly ring-buffer) KV cache.
+    """Attention of one (or a chunk of) query token(s) against a KV cache.
 
-    q: (B,1,Hq,D); caches: (B,Sc,Hkv,D); k_pos: (B,Sc) int32 positions
-    (−1 ⇒ empty slot); q_pos: (B,) current position. GQA keeps the grouped
-    form here (decode is memory-bound on the cache; no head-TP reshape).
+    q: (B,S,Hq,D); caches: (B,Sc,Hkv,D); k_pos: (B,Sc) int32 positions
+    (−1 ⇒ empty slot); q_pos: (B,) single-token position or (B,S)
+    per-query positions (−1 ⇒ masked query row — chunked prefill's
+    padding lanes). GQA keeps the grouped form here (decode is
+    memory-bound on the cache; no head-TP reshape).
 
-    Inside a ``kernels.dispatch.fused_decode()`` context the whole
-    pipeline runs as one Pallas kernel per lane (same op order, same
-    single output rounding — token parity preserved).
+    S=1 inside a ``kernels.dispatch.fused_decode()`` context runs the
+    whole pipeline as one Pallas kernel per lane (same op order, same
+    single output rounding — token parity preserved). S>1 (chunked
+    prefill) always takes the generic path: every query row masks the
+    same (Sc,) cache axis, so a chunk step is bitwise-identical to
+    feeding its tokens one step at a time.
     """
-    if dispatch.fused_decode_enabled():
-        from repro.kernels.decode_attention import fused_decode_attention
-        out = fused_decode_attention(q, k_cache, v_cache, k_pos, q_pos,
-                                     window=window, softcap=softcap,
-                                     p_dtype=qa.dtype)
-        return qa.cast(out)
-    B, _, Hq, D = q.shape
+    B, S, Hq, D = q.shape
+    if S == 1:
+        q_pos = q_pos.reshape(B)
+        if dispatch.fused_decode_enabled():
+            from repro.kernels.decode_attention import fused_decode_attention
+            out = fused_decode_attention(q, k_cache, v_cache, k_pos, q_pos,
+                                         window=window, softcap=softcap,
+                                         p_dtype=qa.dtype)
+            return qa.cast(out)
+        _, Sc, Hkv, _ = k_cache.shape
+        group = Hq // Hkv
+        qg = q.reshape(B, Hkv, group, D)
+        scale = 1.0 / math.sqrt(D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = (k_pos[:, None, None, :] <= q_pos[:, None, None, None]) & \
+             (k_pos[:, None, None, :] >= 0)
+        if window is not None:
+            ok &= q_pos[:, None, None, None] - k_pos[:, None, None, :] < window
+        s = jnp.where(ok, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(qa.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        return qa.cast(out.reshape(B, 1, Hq, D))
+    # multi-query chunk: per-row causal masks over the same cache axis.
+    # Reduction order per query row equals the S=1 path's (same (Sc,)
+    # axis, masked cells contribute exact zeros), which is what makes
+    # chunked prefill token-for-token identical to one-at-a-time feeding.
     _, Sc, Hkv, _ = k_cache.shape
     group = Hq // Hkv
-    qg = q.reshape(B, Hkv, group, D)
+    qg = q.reshape(B, S, Hkv, group, D)
     scale = 1.0 / math.sqrt(D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+    s = jnp.einsum("bshgd,bkhd->bshgk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    ok = (k_pos[:, None, None, :] <= q_pos[:, None, None, None]) & \
-         (k_pos[:, None, None, :] >= 0)
+    qp = q_pos.reshape(B, S)[:, :, None, None, None]
+    kp = k_pos[:, None, None, None, :]
+    ok = (kp <= qp) & (kp >= 0)
     if window is not None:
-        ok &= q_pos[:, None, None, None] - k_pos[:, None, None, :] < window
+        ok &= qp - kp < window
     s = jnp.where(ok, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(qa.dtype), v_cache,
+    out = jnp.einsum("bshgk,bkhd->bshgd", p.astype(qa.dtype), v_cache,
                      preferred_element_type=jnp.float32)
-    return qa.cast(out.reshape(B, 1, Hq, D))
+    return qa.cast(out.reshape(B, S, Hq, D))
 
 
 # ---------------------------------------------------------------------------
@@ -343,9 +372,24 @@ def attention_init(key, cfg, dtype=jnp.float32):
 
 def attention_apply(qa: QArith, p, x, cfg, *, positions, causal=True,
                     window=None, cache=None, cache_pos=None, chunk=1024,
-                    kv_override=None, mrope_positions=None):
+                    kv_override=None, mrope_positions=None, block_table=None):
     """x: (B,S,Dm). Returns (out, new_cache_kv) — cache_kv=(k,v,k_pos) when
-    decoding, else None. ``kv_override`` supplies cross-attention K/V."""
+    decoding, else None. ``kv_override`` supplies cross-attention K/V.
+
+    Two decode cache layouts are supported:
+
+    * contiguous tuple ``(k_cache, v_cache, k_pos)`` — one `max_len`
+      (or window-sized ring) stripe per lane;
+    * paged dict ``{"k_pages", "v_pages", "pos_pages"}`` — a shared
+      (R, page, Hkv, hd) pool plus a per-lane ``block_table`` (B, n_blocks)
+      mapping logical block b → physical page row. Row R−1 is the null
+      page: block-table entries of unmapped blocks point there, it is
+      never written (writes routed to it are dropped), so its positions
+      stay −1 and gathered null blocks mask to exact zeros. Token at
+      logical position p always lands at gathered-view index p, so the
+      paged view is bitwise-identical to a contiguous cache of the same
+      length — the parity contract survives the indirection.
+    """
     B, S, _ = x.shape
     hd = cfg.head_dim
     q = dense(qa, p["wq"], x).reshape(B, S, cfg.n_heads, hd)
@@ -362,7 +406,45 @@ def attention_apply(qa: QArith, p, x, cfg, *, positions, causal=True,
         k, v = kv_override
 
     new_cache = None
-    if cache is not None:
+    if isinstance(cache, dict):
+        # ---- paged pool: scatter through the block table, gather a view.
+        assert block_table is not None, "paged cache requires a block table"
+        kp, vp, pp = cache["k_pages"], cache["v_pages"], cache["pos_pages"]
+        R_, Psz = pp.shape
+        n_blocks = block_table.shape[1]
+        tpos = positions.reshape(B, S).astype(jnp.int32)
+        blk = jnp.clip(jnp.where(tpos >= 0, tpos // Psz, 0), 0, n_blocks - 1)
+        page = jnp.take_along_axis(block_table, blk, axis=1)
+        # parked / padding tokens (pos −1) and writes aimed at the null
+        # row (an unmapped block — scheduler bug guard) go out of range
+        # and are dropped.
+        page = jnp.where((tpos >= 0) & (page < R_ - 1), page, R_)
+        off = jnp.where(tpos >= 0, tpos % Psz, 0)
+        kp = kp.at[page.ravel(), off.ravel()].set(
+            k.reshape(B * S, cfg.n_kv_heads, hd).astype(kp.dtype), mode="drop")
+        vp = vp.at[page.ravel(), off.ravel()].set(
+            v.reshape(B * S, cfg.n_kv_heads, hd).astype(vp.dtype), mode="drop")
+        pp = pp.at[page.ravel(), off.ravel()].set(
+            tpos.ravel(), mode="drop")
+        new_cache = {"k_pages": kp, "v_pages": vp, "pos_pages": pp}
+        q_pos = tpos[:, -1] if S == 1 else tpos
+        if S == 1 and dispatch.fused_decode_enabled():
+            from repro.kernels.decode_attention import (
+                fused_paged_decode_attention)
+            out = fused_paged_decode_attention(
+                q, kp, vp, pp, block_table, q_pos, window=window,
+                softcap=cfg.attn_logit_softcap, p_dtype=qa.dtype)
+            out = qa.cast(out)
+        else:
+            k_view = kp[block_table].reshape(B, n_blocks * Psz,
+                                             cfg.n_kv_heads, hd)
+            v_view = vp[block_table].reshape(B, n_blocks * Psz,
+                                             cfg.n_kv_heads, hd)
+            pos_view = pp[block_table].reshape(B, n_blocks * Psz)
+            out = decode_attention(qa, q, k_view, v_view, pos_view,
+                                   q_pos=q_pos, window=window,
+                                   softcap=cfg.attn_logit_softcap)
+    elif cache is not None:
         # cache_pos is either a scalar step counter (whole batch decodes in
         # lock-step: train-style generate) or a per-lane (B,) position
         # vector (continuous batching: every slot sits at its own depth).
@@ -370,28 +452,32 @@ def attention_apply(qa: QArith, p, x, cfg, *, positions, causal=True,
         # windows where the cache is window-sized.
         k_cache, v_cache, k_pos = cache
         Sc = k_cache.shape[1]
-        slot = cache_pos % Sc
         if jnp.ndim(cache_pos) == 0:
+            slot = cache_pos % Sc
             k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
             k_pos = jax.lax.dynamic_update_slice_in_dim(
                 k_pos, positions.reshape(B, S).astype(k_pos.dtype), slot, axis=1)
+            q_pos = positions.reshape(B, S)[:, -1] if S == 1 \
+                else positions.reshape(B, S)
         else:
-            # per-lane scatter: one new token per slot (S must be 1).
-            # Lanes with cache_pos < 0 are parked (continuous batching's
-            # `active` mask): their write index is routed out of range and
-            # dropped, so masking costs nothing on the KV pool.
-            assert S == 1, "per-lane cache_pos decodes one token per slot"
-            lane = jnp.arange(B)
-            slot = jnp.where(cache_pos >= 0, slot, Sc)
+            # per-lane scatter: S tokens per slot at per-lane depths (the
+            # continuous-batching layout; S > 1 is a prefill chunk).
+            # Lanes/tokens with position < 0 are parked (continuous
+            # batching's `active` mask or chunk padding): their write
+            # index is routed out of range and dropped, so masking costs
+            # nothing on the KV pool.
+            tpos = positions.reshape(B, S).astype(jnp.int32)
+            lane = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+            slot = jnp.where(tpos >= 0, tpos % Sc, Sc)
             k_cache = k_cache.at[lane, slot].set(
-                k[:, 0].astype(k_cache.dtype), mode="drop")
+                k.astype(k_cache.dtype), mode="drop")
             v_cache = v_cache.at[lane, slot].set(
-                v[:, 0].astype(v_cache.dtype), mode="drop")
-            k_pos = k_pos.at[lane, slot].set(
-                positions.reshape(B).astype(k_pos.dtype), mode="drop")
+                v.astype(v_cache.dtype), mode="drop")
+            k_pos = k_pos.at[lane, slot].set(tpos, mode="drop")
+            q_pos = tpos[:, -1] if S == 1 else tpos
         out = decode_attention(qa, q, k_cache, v_cache, k_pos,
-                               q_pos=positions.reshape(B, S)[:, -1],
+                               q_pos=q_pos,
                                window=window, softcap=cfg.attn_logit_softcap)
         new_cache = (k_cache, v_cache, k_pos)
     else:

@@ -77,17 +77,24 @@ def forward_logits(qa: QArith, params, cfg, batch: dict[str, Any], *,
 
 
 def make_cache(qa: QArith, params, cfg, batch: dict[str, Any], *,
-               batch_size: int, max_len: int, dtype=jnp.bfloat16):
+               batch_size: int, max_len: int, dtype=jnp.bfloat16,
+               page_size=None, n_rows=None):
     if cfg.encdec:
+        if page_size is not None:
+            raise ValueError("paged KV cache is not supported for enc-dec")
         enc_out = ED.encode(qa, params, cfg, batch["src_embeds"], remat=False)
         return ED.init_decode_cache(cfg, params, qa, enc_out, batch_size,
                                     max_len, dtype)
-    return T.init_cache(cfg, batch_size, max_len, dtype)
+    return T.init_cache(cfg, batch_size, max_len, dtype,
+                        page_size=page_size, n_rows=n_rows)
 
 
 def decode(qa: QArith, params, cfg, token, cache, cache_pos, *,
-           mrope_positions=None):
+           mrope_positions=None, block_table=None):
     if cfg.encdec:
+        if block_table is not None:
+            raise ValueError("paged KV cache is not supported for enc-dec")
         return ED.encdec_decode_step(qa, params, cfg, token, cache, cache_pos)
     return T.decode_step(qa, params, cfg, token, cache, cache_pos,
-                         mrope_positions=mrope_positions)
+                         mrope_positions=mrope_positions,
+                         block_table=block_table)

@@ -59,7 +59,7 @@ def block_init(key, cfg, kind: str, dtype=jnp.float32) -> PyTree:
 
 def block_apply(qa: QArith, cfg, kind: str, p, x, *, positions,
                 cache=None, cache_pos=None, mrope_positions=None,
-                attn_chunk: int = 1024):
+                attn_chunk: int = 1024, block_table=None):
     """Returns (x, new_cache). cache=None for full-sequence (train/prefill)."""
     h = L.norm_apply(qa, cfg.norm, p["ln1"], x)
     new_cache = None
@@ -67,12 +67,20 @@ def block_apply(qa: QArith, cfg, kind: str, p, x, *, positions,
         if cache is None:
             y = S.mamba_apply(qa, p["mixer"], h, cfg)
         else:
+            if x.shape[1] != 1:
+                raise ValueError("mamba decode is strictly one token per "
+                                 "step; chunked prefill requires an "
+                                 "attention-only block pattern")
             y, new_cache = S.mamba_decode_step(qa, p["mixer"], h, cfg, cache)
         return qa.add(x, y), new_cache
     if kind == "rec":
         if cache is None:
             y = R.rglru_apply(qa, p["mixer"], h, cfg)
         else:
+            if x.shape[1] != 1:
+                raise ValueError("recurrent decode is strictly one token "
+                                 "per step; chunked prefill requires an "
+                                 "attention-only block pattern")
             y, new_cache = R.rglru_decode_step(qa, p["mixer"], h, cfg, cache)
     else:
         window = (cfg.local_attn_window if kind == "local_attn"
@@ -80,7 +88,8 @@ def block_apply(qa: QArith, cfg, kind: str, p, x, *, positions,
         y, new_cache = L.attention_apply(
             qa, p["mixer"], h, cfg, positions=positions, causal=True,
             window=window, cache=cache, cache_pos=cache_pos,
-            chunk=attn_chunk, mrope_positions=mrope_positions)
+            chunk=attn_chunk, mrope_positions=mrope_positions,
+            block_table=block_table)
     x = qa.add(x, y)
     h = L.norm_apply(qa, cfg.norm, p["ln2"], x)
     if kind == "moe":
@@ -135,7 +144,8 @@ def init_lm(cfg, key, dtype=jnp.float32) -> PyTree:
 # Cache init
 # ---------------------------------------------------------------------------
 
-def _block_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+def _block_cache(cfg, kind: str, batch: int, max_len: int, dtype,
+                 page_size=None, n_rows=None):
     hd = cfg.head_dim
     if kind == "mamba":
         return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
@@ -146,20 +156,35 @@ def _block_cache(cfg, kind: str, batch: int, max_len: int, dtype):
                 "h": jnp.zeros((batch, w), jnp.float32)}
     window = cfg.local_attn_window if kind == "local_attn" else cfg.swa_window
     clen = min(max_len, window) if window else max_len
+    if page_size is not None and clen == max_len:
+        # full-context attention layer → paged pool. Window-sized ring
+        # layers stay contiguous: their cache is already token-tight.
+        return {"k_pages": jnp.zeros((n_rows, page_size, cfg.n_kv_heads, hd), dtype),
+                "v_pages": jnp.zeros((n_rows, page_size, cfg.n_kv_heads, hd), dtype),
+                "pos_pages": jnp.full((n_rows, page_size), -1, jnp.int32)}
     return (jnp.zeros((batch, clen, cfg.n_kv_heads, hd), dtype),
             jnp.zeros((batch, clen, cfg.n_kv_heads, hd), dtype),
             jnp.full((batch, clen), -1, jnp.int32))
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> PyTree:
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, *,
+               page_size=None, n_rows=None) -> PyTree:
+    """Decode cache. ``page_size``/``n_rows`` switch full-context attention
+    layers to the paged layout (all layers share one block table, so the
+    pool rows are per-layer but the logical→physical map is engine-wide);
+    recurrent / ring-window leaves keep the per-slot layout either way."""
+    if (page_size is None) != (n_rows is None):
+        raise ValueError("page_size and n_rows must be given together")
     kinds, n_groups, rem = _layer_plan(cfg)
-    one_group = {f"b{i}": _block_cache(cfg, kind, batch, max_len, dtype)
+    one_group = {f"b{i}": _block_cache(cfg, kind, batch, max_len, dtype,
+                                       page_size, n_rows)
                  for i, kind in enumerate(kinds)}
     stacked = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (n_groups, *a.shape)).copy(), one_group)
     cache = {"layers": stacked}
     if rem:
-        cache["rem"] = {f"b{i}": _block_cache(cfg, kind, batch, max_len, dtype)
+        cache["rem"] = {f"b{i}": _block_cache(cfg, kind, batch, max_len, dtype,
+                                              page_size, n_rows)
                         for i, kind in enumerate(rem)}
     return cache
 
@@ -217,17 +242,20 @@ def forward(qa: QArith, params, cfg, tokens, *, positions=None,
 
 
 def decode_step(qa: QArith, params, cfg, token, cache, cache_pos, *,
-                mrope_positions=None):
-    """One decode step. token: (B,1) int32 (or (B,1,D) embeds); cache_pos:
-    int32 position of this token — a scalar when the whole batch decodes
-    in lock-step, or a (B,) vector when every lane sits at its own depth
-    (the continuous-batching slot layout). Returns (logits, new_cache)."""
+                mrope_positions=None, block_table=None):
+    """One decode step. token: (B,S) int32 (or (B,S,D) embeds); cache_pos:
+    int32 position — a scalar when the whole batch decodes in lock-step
+    (S=1), a (B,) vector when every lane sits at its own depth (the
+    continuous-batching slot layout, S=1), or a (B,S) matrix of per-token
+    positions (chunked prefill; −1 marks padding tokens past a lane's
+    chunk). ``block_table`` (B, n_blocks) int32 routes paged-cache leaves.
+    Returns (logits, new_cache)."""
     kinds, _, rem = _layer_plan(cfg)
-    B = token.shape[0]
+    B, S = token.shape[:2]
     if jnp.ndim(cache_pos) == 0:
-        positions = jnp.broadcast_to(cache_pos[None, None], (B, 1)).astype(jnp.int32)
+        positions = jnp.broadcast_to(cache_pos[None, None], (B, S)).astype(jnp.int32)
     else:
-        positions = cache_pos.reshape(B, 1).astype(jnp.int32)
+        positions = cache_pos.reshape(B, S).astype(jnp.int32)
     x = shard_batch(_embed_tokens(qa, cfg, params, token))
 
     def group_body(x, inp):
@@ -237,7 +265,7 @@ def decode_step(qa: QArith, params, cfg, token, cache, cache_pos, *,
             x, new_c[f"b{i}"] = block_apply(
                 qa, cfg, kind, p_group[f"b{i}"], x, positions=positions,
                 cache=c_group[f"b{i}"], cache_pos=cache_pos,
-                mrope_positions=mrope_positions)
+                mrope_positions=mrope_positions, block_table=block_table)
             x = shard_batch(x)
         return x, new_c
 
@@ -250,5 +278,5 @@ def decode_step(qa: QArith, params, cfg, token, cache, cache_pos, *,
             x, new_cache["rem"][f"b{i}"] = block_apply(
                 qa, cfg, kind, params["rem"][f"b{i}"], x, positions=positions,
                 cache=cache["rem"][f"b{i}"], cache_pos=cache_pos,
-                mrope_positions=mrope_positions)
+                mrope_positions=mrope_positions, block_table=block_table)
     return _logits(qa, cfg, params, x), new_cache

@@ -13,6 +13,11 @@ driver):
   sharded over the mesh via :func:`repro.dist.cache_specs`) plus the
   functional per-slot ``reset_slots`` / ``keep_active`` helpers the
   slot-indexed serve step is built from.
+* :mod:`repro.serve.paged` — the token-granular alternative:
+  :class:`~repro.serve.paged.PagedCachePool` cuts the KV memory of
+  full-context attention layers into fixed-size pages mapped per lane
+  through a block table, so pool bytes gate on *live* tokens instead of
+  reserved ``max_len`` stripes (``Engine(paged=True)``).
 * :mod:`repro.serve.engine` — continuous batching:
   :class:`~repro.serve.engine.Engine` admits requests into free slots,
   steps every active slot through one compiled
@@ -25,12 +30,15 @@ The engine covers every decoder-only family (dense / GQA / MoE / SSM /
 hybrid); encoder–decoder models keep the lock-step ``generate`` path
 (their decode positions drive a scalar sinusoidal embedding).
 """
-from repro.serve.cache import CachePool, cache_dtype, keep_active, reset_slots
+from repro.serve.cache import (CachePool, cache_dtype, keep_active,
+                               reset_pages, reset_slots)
 from repro.serve.decode import generate
 from repro.serve.engine import Completion, Engine, EngineStats, Request
+from repro.serve.paged import PagedCachePool
 
 __all__ = [
-    "CachePool", "cache_dtype", "keep_active", "reset_slots",
+    "CachePool", "PagedCachePool", "cache_dtype", "keep_active",
+    "reset_pages", "reset_slots",
     "generate",
     "Completion", "Engine", "EngineStats", "Request",
 ]

@@ -47,10 +47,16 @@ from repro.core.qarith import QArith
 from repro.dist.partition import STACKED_CACHE_ROOTS, cache_specs
 from repro.models import registry as R
 
-__all__ = ["CachePool", "cache_dtype", "keep_active", "reset_slots",
-           "slot_count"]
+__all__ = ["CachePool", "PAGED_KEYS", "cache_dtype", "keep_active",
+           "reset_pages", "reset_slots", "slot_count"]
 
 PyTree = Any
+
+# Leaf names of the paged KV layout (see ``repro.models.transformer
+# ._block_cache``). Paged leaves have a *page* leading dim instead of a
+# slot dim — every per-slot helper below must skip them; their lifecycle
+# is page-granular (:func:`reset_pages` + the engine's block tables).
+PAGED_KEYS = frozenset({"k_pages", "v_pages", "pos_pages"})
 
 
 def cache_dtype(policy: PrecisionPolicy):
@@ -87,6 +93,11 @@ def _per_slot(mask: jax.Array, leaf: jax.Array, sdim: int) -> jax.Array:
     return mask.reshape(shape)
 
 
+def _is_paged(path) -> bool:
+    """True for leaves of a paged KV dict (page-indexed, not slot-indexed)."""
+    return bool(set(_names(path)) & PAGED_KEYS)
+
+
 def _is_kv_value(path) -> bool:
     """True for the k/v buffers of an attention cache tuple.
 
@@ -118,6 +129,8 @@ def reset_slots(cache: PyTree, reset: jax.Array) -> PyTree:
     """
 
     def one(path, leaf):
+        if _is_paged(path):
+            return leaf            # page-granular lifecycle: reset_pages
         if jnp.issubdtype(leaf.dtype, jnp.integer):
             fresh = jnp.array(-1, leaf.dtype)          # position map
         elif _is_kv_value(path):
@@ -125,6 +138,27 @@ def reset_slots(cache: PyTree, reset: jax.Array) -> PyTree:
         else:
             fresh = jnp.array(0, leaf.dtype)           # conv / h state
         return jnp.where(_per_slot(reset, leaf, _slot_dim(path)), fresh, leaf)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def reset_pages(cache: PyTree, page_mask: jax.Array) -> PyTree:
+    """Re-initialize the physical pages selected by ``page_mask`` ((R,) bool).
+
+    The paged analogue of :func:`reset_slots`: only ``pos_pages`` rows go
+    to −1 — that alone makes every KV cell of a recycled page unreachable
+    (attention masks on the position map) — so handing a freed page to a
+    new sequence never streams the (much larger) ``k_pages``/``v_pages``
+    values. Slot-indexed leaves pass through untouched.
+    """
+
+    def one(path, leaf):
+        names = _names(path)
+        if "pos_pages" not in names:
+            return leaf
+        pdim = _slot_dim(path)     # stacked roots put the page dim at 1
+        return jnp.where(_per_slot(page_mask, leaf, pdim),
+                         jnp.array(-1, leaf.dtype), leaf)
 
     return jax.tree_util.tree_map_with_path(one, cache)
 
@@ -142,7 +176,8 @@ def keep_active(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
     """
 
     def one(path, n, o):
-        if _is_kv_value(path) or jnp.issubdtype(n.dtype, jnp.integer):
+        if _is_paged(path) or _is_kv_value(path) or \
+                jnp.issubdtype(n.dtype, jnp.integer):
             return n
         return jnp.where(_per_slot(active, n, _slot_dim(path)), n, o)
 
@@ -150,10 +185,18 @@ def keep_active(active: jax.Array, new: PyTree, old: PyTree) -> PyTree:
 
 
 def slot_count(cache: PyTree) -> int:
-    """Number of slots in a cache pytree (extent of the slot axis)."""
-    paths = jax.tree_util.tree_flatten_with_path(cache)[0]
-    path, leaf = paths[0]
-    return leaf.shape[_slot_dim(path)]
+    """Number of slots in a cache pytree (extent of the slot axis).
+
+    Paged leaves are page-indexed, not slot-indexed, so they are skipped;
+    a fully paged attention-only cache still carries slot-indexed leaves
+    nowhere — then the caller must know ``n_slots`` out of band.
+    """
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if _is_paged(path):
+            continue
+        return leaf.shape[_slot_dim(path)]
+    raise ValueError("cache has no slot-indexed leaves (fully paged); "
+                     "slot count must be tracked by the pool")
 
 
 class CachePool:

@@ -2,30 +2,41 @@
 
 Scheduling model (the vLLM/Orca iteration-level loop, reduced to its
 core): the engine owns ``n_slots`` decode lanes backed by one
-:class:`repro.serve.cache.CachePool` allocation. Every :meth:`Engine.step`
-is one iteration of
+:class:`repro.serve.cache.CachePool` allocation — or, with ``paged=True``,
+one :class:`repro.serve.paged.PagedCachePool` whose KV memory is
+allocated page-by-page as sequences grow. Every :meth:`Engine.step` is
+one iteration of
 
 1. **admit** — pending requests are popped into free slots; the freshly
    acquired slot ids form the step's ``reset`` mask, so slot
    re-initialization happens *inside* the compiled step (no separate
-   reset executable, no host round-trip over the cache);
-2. **assemble** — per slot: prefilling lanes feed the next prompt token
-   (teacher forcing), decoding lanes feed their previously sampled
-   token, parked lanes are masked out via ``active``;
-3. **decode** — one call of the single compiled
+   reset executable, no host round-trip over the cache). The paged pool
+   additionally gates admission on free pages covering the prompt;
+2. **plan** — per lane (oldest admission first): prefilling lanes are
+   scheduled up to ``prefill_chunk`` prompt tokens, decode lanes exactly
+   one. Under paging, each lane's block table is extended to cover its
+   scheduled positions; when the free list runs dry the *youngest* lane
+   is preempted (pages + slot freed, request re-queued at the front —
+   greedy decode regenerates its tokens identically on re-admission), a
+   lane that still cannot be covered parks for the step;
+3. **decode** — one call of a compiled
    :func:`repro.train.step.make_serve_step` executable advances every
-   active lane one position (prefill and decode share the slot layout,
-   so per (mesh, policy) there is exactly one compiled program);
+   scheduled lane. Two executables exist at most: the 1-token step
+   (steady state; optionally the fused Pallas kernel) and — only when
+   ``prefill_chunk > 1`` — the (N, C) chunk step, used on exactly the
+   iterations where some lane feeds more than one token;
 4. **evict** — lanes whose model output completed a sequence (EOS or
-   ``max_new_tokens``) release their slot, which the next iteration's
-   admission refills mid-flight.
+   ``max_new_tokens``) release their slot (and pages), which the next
+   iteration's admission refills mid-flight.
 
-A request of prompt length ``S0`` therefore occupies its slot for
-``S0 + n_generated`` steps; the first sampled token is the model output
-of the step that consumed the last prompt token. Under nearest rounding
-this path is token-for-token identical to lock-step
+A request of prompt length ``S0`` occupies its lane for
+``ceil(S0 / C) + n_generated`` steps; the first sampled token is the
+model output of the step that consumed the last prompt token. Under
+nearest rounding this path is token-for-token identical to lock-step
 :func:`repro.serve.decode.generate` (the engine parity tests assert
-exact equality).
+exact equality) — chunking and paging included: a chunk step's per-row
+causal masks reproduce the sequential reductions bit-for-bit, and a
+paged lane's gathered KV view is index-for-index the contiguous cache.
 
 Sampling is greedy (argmax inside the executable) — temperature sampling
 would only need the step to return logits, at (N, vocab) extra bytes per
@@ -46,6 +57,7 @@ from repro.core.policy import PrecisionPolicy
 from repro.dist.axes import activation_sharding
 from repro.dist.partition import dp_axes, dp_size, serve_input_specs
 from repro.serve.cache import CachePool
+from repro.serve.paged import PagedCachePool
 from repro.train.step import make_serve_step
 
 __all__ = ["Request", "Completion", "EngineStats", "Engine"]
@@ -69,6 +81,7 @@ class Completion:
     slot: int
     admitted_step: int
     finished_step: int
+    first_token_step: int = -1    # step whose output was the first sample
 
 
 @dataclasses.dataclass
@@ -76,16 +89,31 @@ class EngineStats:
     """Iteration-level counters (see docs/serving.md for the math)."""
     steps: int = 0                # engine iterations = compiled-step calls
     slot_steps: int = 0           # steps × n_slots (lane capacity spent)
-    active_slot_steps: int = 0    # lanes that actually computed a token
-    prefill_slot_steps: int = 0   # … of which were prompt (teacher-forced)
+    active_slot_steps: int = 0    # lanes that actually computed this step
+    prefill_slot_steps: int = 0   # … of which were still mid-prompt after
     tokens_generated: int = 0     # sampled continuation tokens kept
     admitted: int = 0
     finished: int = 0
+    preemptions: int = 0          # lanes evicted to reclaim pages
+    kv_capacity_tokens: int = 0   # token capacity of the KV pool
+    kv_token_steps: int = 0       # Σ over steps of live KV tokens
+    kv_tokens_live: int = 0       # live KV tokens right now
+    kv_pages_live: int = 0        # live pages right now (paged pool only)
+
+    @property
+    def lane_occupancy(self) -> float:
+        """Fraction of lane capacity computing (active / total lanes)."""
+        return self.active_slot_steps / max(self.slot_steps, 1)
 
     @property
     def utilization(self) -> float:
-        """Fraction of lane capacity doing useful work (active / total)."""
-        return self.active_slot_steps / max(self.slot_steps, 1)
+        """Fraction of KV *token* capacity holding live tokens, averaged
+        over steps. This is memory utilization, not lane occupancy: a
+        10-token sequence parked in a 512-token stripe counts as 10/512
+        of a slot, not as a fully utilized lane (the distortion the
+        paged pool exists to fix — see docs/serving.md)."""
+        return self.kv_token_steps / max(self.steps *
+                                         max(self.kv_capacity_tokens, 1), 1)
 
 
 @dataclasses.dataclass
@@ -94,8 +122,10 @@ class _Slot:
     prompt: np.ndarray
     max_new_tokens: int
     admitted_step: int
+    seq: int                      # global admission order (preemption rank)
     fed: int = 0                  # tokens consumed so far (= next position)
     last_token: int = 0           # model output of the previous step
+    first_token_step: int = -1
     generated: list = dataclasses.field(default_factory=list)
 
 
@@ -107,37 +137,87 @@ class Engine:
     sharded via ``cache_specs`` and the step inputs via
     ``serve_input_specs``; the compiled step then runs under the mesh +
     activation-sharding context exactly as the dry-run compiles it.
+
+    ``paged=True`` backs full-context attention layers with a
+    :class:`~repro.serve.paged.PagedCachePool` (``page_size`` tokens per
+    page, ``n_pages`` pages — default byte-parity with the contiguous
+    pool; undersubscribe it to serve more lanes per byte).
+    ``prefill_chunk=C > 1`` admits prompts C tokens per iteration instead
+    of one, interleaved with in-flight decodes — bounding TTFT for long
+    prompts without stalling decode lanes. Chunked prefill requires an
+    attention-only, full-context stack (recurrent state and ring-window
+    caches advance strictly one token per step).
     """
 
     def __init__(self, params, cfg, policy: PrecisionPolicy, *,
                  n_slots: int = 8, max_len: int = 128, mesh=None,
-                 eos_id: Optional[int] = None, fused_decode: bool = False):
+                 eos_id: Optional[int] = None, fused_decode: bool = False,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None, prefill_chunk: int = 1):
         if cfg.encdec:
             raise ValueError("Engine is decoder-only; encoder-decoder "
                              "models serve via repro.serve.decode.generate")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if prefill_chunk > 1:
+            if cfg.family == "ssm" or any(
+                    k in ("rec", "mamba") for k in cfg.block_pattern):
+                raise ValueError(
+                    "chunked prefill requires an attention-only stack "
+                    "(recurrent state advances one token per step)")
+            windows = [cfg.swa_window]
+            if "local_attn" in cfg.block_pattern:
+                windows.append(cfg.local_attn_window)
+            for w in windows:
+                if w is not None and w < max_len:
+                    raise ValueError(
+                        "chunked prefill requires full-context attention "
+                        f"(window {w} < max_len {max_len}: a chunk could "
+                        "evict ring cells still inside an earlier chunk "
+                        "token's window)")
         self.cfg = cfg
         self.policy = policy
         self.params = params
         self.mesh = mesh
         self.eos_id = eos_id
-        self.pool = CachePool(params, cfg, policy, n_slots=n_slots,
-                              max_len=max_len, mesh=mesh)
-        self._step_fn = jax.jit(
-            make_serve_step(cfg, policy, fused_decode=fused_decode),
+        self.paged = bool(paged)
+        self.prefill_chunk = int(prefill_chunk)
+        if paged:
+            self.pool: Any = PagedCachePool(
+                params, cfg, policy, n_slots=n_slots, max_len=max_len,
+                page_size=page_size, n_pages=n_pages, mesh=mesh)
+        else:
+            self.pool = CachePool(params, cfg, policy, n_slots=n_slots,
+                                  max_len=max_len, mesh=mesh)
+        self._step1 = jax.jit(
+            make_serve_step(cfg, policy, fused_decode=fused_decode,
+                            paged=paged),
             donate_argnums=(1,))
+        self._stepC = None
+        if prefill_chunk > 1:
+            self._stepC = jax.jit(
+                make_serve_step(cfg, policy, fused_decode=fused_decode,
+                                paged=paged, chunk=prefill_chunk),
+                donate_argnums=(1,))
         self._in_shardings = None
         if mesh is not None:
             from jax.sharding import NamedSharding
+            n_rows = self.pool.n_rows if paged else None
             self._in_shardings = {
                 k: NamedSharding(mesh, s)
-                for k, s in serve_input_specs(n_slots, mesh).items()}
+                for k, s in serve_input_specs(
+                    n_slots, mesh, paged=paged, n_rows=n_rows,
+                    chunk=prefill_chunk).items()}
             self._dp = dp_axes(mesh)
             self._mp = (mesh.shape["model"]
                         if "model" in mesh.axis_names else 1)
         self._slots: list[Optional[_Slot]] = [None] * n_slots
         self._pending: deque[Request] = deque()
         self._next_rid = 0
+        self._next_seq = 0
         self.stats = EngineStats()
+        self.stats.kv_capacity_tokens = (
+            self.pool.capacity_tokens if paged else n_slots * max_len)
 
     # -- request intake -----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *,
@@ -161,32 +241,117 @@ class Engine:
     def has_work(self) -> bool:
         return bool(self._pending) or any(s is not None for s in self._slots)
 
+    # -- scheduling helpers -------------------------------------------------
+    def _admit(self, reset: np.ndarray) -> None:
+        """Pop pending requests into free slots (FIFO, no reordering).
+
+        The paged pool additionally gates on free pages covering the
+        request's prompt plus one decode page — admitting a sequence the
+        pool cannot prefill would only bounce it straight back through
+        preemption.
+        """
+        while self._pending and self.pool.n_free:
+            req = self._pending[0]
+            if self.paged:
+                need = self.pool.blocks_for(min(req.prompt.size + 1,
+                                                self.pool.max_len))
+                if self.pool.n_free_pages < need:
+                    break
+            self._pending.popleft()
+            slot = self.pool.acquire()
+            self._slots[slot] = _Slot(req.rid, req.prompt,
+                                      req.max_new_tokens, self.stats.steps,
+                                      self._next_seq)
+            self._next_seq += 1
+            reset[slot] = True
+            self.stats.admitted += 1
+
+    def _preempt(self, victim: int, reset: np.ndarray) -> None:
+        """Evict a lane to reclaim its pages; its request re-queues at the
+        front and — greedy decode being deterministic — regenerates the
+        same tokens on re-admission (vLLM's recompute preemption)."""
+        s = self._slots[victim]
+        self._slots[victim] = None
+        self.pool.release(victim)
+        reset[victim] = False   # nothing left to reset; slot is free again
+        self._pending.appendleft(Request(s.rid, s.prompt, s.max_new_tokens))
+        self.stats.preemptions += 1
+        # re-admission recounts the request and regenerates its tokens
+        self.stats.admitted -= 1
+        self.stats.tokens_generated -= len(s.generated)
+
+    def _plan(self, reset: np.ndarray,
+              page_reset: Optional[np.ndarray]) -> np.ndarray:
+        """Tokens to feed per lane this step ((N,) i32, 0 = parked).
+
+        Oldest admission first, so page pressure falls on the youngest
+        lanes: a lane that cannot get its blocks preempts strictly
+        younger lanes (never an already-planned one), and parks if it is
+        the youngest itself.
+        """
+        n = self.pool.n_slots
+        feeds = np.zeros((n,), np.int32)
+        order = sorted((i for i in range(n) if self._slots[i] is not None),
+                       key=lambda i: self._slots[i].seq)
+        for i in order:
+            s = self._slots[i]
+            if s is None:        # preempted by an older lane this step
+                continue
+            remaining = s.prompt.size - s.fed
+            c = min(self.prefill_chunk, remaining) if remaining > 0 else 1
+            if self.paged:
+                while True:
+                    fresh = self.pool.ensure_blocks(i, s.fed + c - 1)
+                    if fresh is not None:
+                        for p in fresh:
+                            page_reset[p] = True
+                        break
+                    young = [j for j in order
+                             if self._slots[j] is not None
+                             and self._slots[j].seq > s.seq]
+                    if not young:
+                        c = 0    # youngest lane and no pages: park
+                        break
+                    victim = max(young, key=lambda j: self._slots[j].seq)
+                    self._preempt(victim, reset)
+            feeds[i] = c
+        return feeds
+
     # -- the iteration ------------------------------------------------------
     def step(self) -> list[Completion]:
         """One continuous-batching iteration; returns requests finished."""
         n = self.pool.n_slots
+        C = self.prefill_chunk
         reset = np.zeros((n,), bool)
+        page_reset = (np.zeros((self.pool.n_rows,), bool)
+                      if self.paged else None)
         # 1. admit into free slots
-        while self._pending and self.pool.n_free:
-            slot = self.pool.acquire()
-            req = self._pending.popleft()
-            self._slots[slot] = _Slot(req.rid, req.prompt,
-                                      req.max_new_tokens, self.stats.steps)
-            reset[slot] = True
-            self.stats.admitted += 1
-        # 2. assemble slot-indexed inputs
-        token = np.zeros((n, 1), np.int32)
+        self._admit(reset)
+        # 2. plan feeds (and, when paged, map blocks / preempt / park)
+        feeds = self._plan(reset, page_reset)
+        use_chunk = self._stepC is not None and int(feeds.max(initial=0)) > 1
+        width = C if use_chunk else 1
+        # 3. assemble slot-indexed inputs
+        token = np.zeros((n, width), np.int32)
         pos = np.zeros((n,), np.int32)
         active = np.zeros((n,), bool)
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or feeds[i] == 0:
                 continue
             active[i] = True
             pos[i] = s.fed
-            token[i, 0] = (s.prompt[s.fed] if s.fed < s.prompt.size
-                           else s.last_token)
-        # 3. one compiled step for every lane
+            if s.fed < s.prompt.size:
+                c = int(feeds[i])
+                token[i, :c] = s.prompt[s.fed:s.fed + c]
+            else:
+                token[i, 0] = s.last_token
+        # 4. one compiled step for every lane
         args = {"token": token, "pos": pos, "active": active, "reset": reset}
+        if self.paged:
+            args["block_table"] = self.pool.block_table.copy()
+            args["page_reset"] = page_reset
+        if use_chunk:
+            args["n_tok"] = feeds.astype(np.int32)
         with contextlib.ExitStack() as ctx:
             if self.mesh is not None:
                 args = {k: jax.device_put(v, self._in_shardings[k])
@@ -194,24 +359,31 @@ class Engine:
                 ctx.enter_context(self.mesh)
                 ctx.enter_context(activation_sharding(
                     self._dp, dp_size(self.mesh), "model", self._mp))
-            out, self.pool.cache = self._step_fn(
+            step_fn = self._stepC if use_chunk else self._step1
+            out, self.pool.cache = step_fn(
                 self.params, self.pool.cache, args["token"], args["pos"],
-                args["active"], args["reset"])
+                args["active"], args["reset"],
+                block_table=args.get("block_table"),
+                page_reset=args.get("page_reset"),
+                n_tok=args.get("n_tok"))
         sampled = np.asarray(out).reshape(n)
-        # 4. account + evict
+        # 5. account + evict
         self.stats.steps += 1
         self.stats.slot_steps += n
         done: list[Completion] = []
+        live_tokens = 0
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or feeds[i] == 0:
                 continue
             self.stats.active_slot_steps += 1
-            in_prefill = s.fed < s.prompt.size - 1
-            s.fed += 1
-            if in_prefill:
+            s.fed += int(feeds[i])
+            live_tokens += s.fed
+            if s.fed < s.prompt.size:
                 self.stats.prefill_slot_steps += 1
                 continue                      # prompt not exhausted yet
             tok = int(sampled[i])
+            if s.first_token_step < 0:
+                s.first_token_step = self.stats.steps
             s.generated.append(tok)
             s.last_token = tok
             self.stats.tokens_generated += 1
@@ -220,10 +392,15 @@ class Engine:
                 done.append(Completion(
                     s.rid, s.prompt, np.asarray(s.generated, np.int32),
                     "eos" if hit_eos else "length", i,
-                    s.admitted_step, self.stats.steps))
+                    s.admitted_step, self.stats.steps, s.first_token_step))
+                live_tokens -= s.fed          # pages return to the pool
                 self._slots[i] = None
                 self.pool.release(i)
                 self.stats.finished += 1
+        self.stats.kv_token_steps += live_tokens
+        self.stats.kv_tokens_live = live_tokens
+        self.stats.kv_pages_live = (self.pool.n_live_pages
+                                    if self.paged else 0)
         return done
 
     def run(self, max_steps: Optional[int] = None) -> list[Completion]:

@@ -1,0 +1,200 @@
+"""Paged KV-cache pool: token-granular memory for the serve engine.
+
+The contiguous :class:`repro.serve.cache.CachePool` reserves a full
+``max_len`` KV stripe per slot — memory scales with *reserved* tokens.
+This pool allocates one shared array of fixed-size **pages** per
+full-context attention layer and maps each lane's logical token blocks
+to physical page rows through a host-side **block table**:
+
+* device side — ``k_pages``/``v_pages`` ``(R, P, H_kv, hd)`` in the
+  policy's value dtype plus ``pos_pages`` ``(R, P)`` i32 (−1 ⇒ empty
+  cell), built by ``make_cache(page_size=…, n_rows=…)``. Row ``R−1`` is
+  the **null page**: block-table entries of unmapped blocks point there;
+  it is never allocated and the model layer drops any write routed to
+  it, so its positions stay −1 forever and gathered null blocks mask to
+  exact zeros. Ring-window attention layers and recurrent state keep the
+  per-slot layout (they are already token-tight);
+* host side — a free list of page ids plus a per-lane ``(N, n_blocks)``
+  block table (``n_blocks = ceil(max_len / P)``). :meth:`ensure_blocks`
+  maps the blocks a lane needs to cover a position, pulling pages from
+  the free list; :meth:`release` returns a lane's pages. Freshly
+  allocated pages are recycled in-graph by the serve step's
+  ``page_reset`` mask (``repro.serve.cache.reset_pages``) — the paged
+  analogue of the slot ``reset`` mask, and just as cheap: only the
+  position rows are touched.
+
+Token at logical position ``p`` always lands at gathered-view index
+``(p // P) * P + p % P = p``, so a paged lane's attention sees exactly
+the contiguous cache it would have had — the engine's token-for-token
+parity contract vs :func:`repro.serve.decode.generate` survives paging
+by construction (asserted in tests/test_serve.py::TestPagedEngine).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.qarith import QArith
+from repro.dist.partition import cache_specs
+from repro.models import registry as R
+from repro.serve.cache import cache_dtype
+
+__all__ = ["PagedCachePool"]
+
+PyTree = Any
+
+
+class PagedCachePool:
+    """Slot + page bookkeeping over one paged cache allocation.
+
+    Slot API matches :class:`repro.serve.cache.CachePool` (``acquire`` /
+    ``release`` / ``n_free`` / ``n_active`` / ``cache`` / ``nbytes``), so
+    the engine treats both pools uniformly; pages add a second, finer
+    allocation axis underneath.
+
+    ``n_pages`` defaults to ``n_slots × ceil(max_len / page_size)`` —
+    byte-equivalent to the contiguous pool. The serving win comes from
+    *undersubscribing*: with mixed-length traffic most sequences never
+    come close to ``max_len``, so a pool with far fewer pages (or far
+    more slots per page budget) sustains the same traffic — the
+    bench_serve SLO bench drives exactly that comparison.
+    """
+
+    def __init__(self, params, cfg, policy: PrecisionPolicy, *,
+                 n_slots: int, max_len: int, page_size: int = 16,
+                 n_pages: Optional[int] = None, mesh=None):
+        if cfg.encdec:
+            raise ValueError("PagedCachePool is decoder-only")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.max_blocks = math.ceil(self.max_len / self.page_size)
+        if n_pages is None:
+            n_pages = self.n_slots * self.max_blocks
+        if n_pages < self.max_blocks:
+            raise ValueError(
+                f"n_pages ({n_pages}) < blocks per max_len sequence "
+                f"({self.max_blocks}): one lane could never finish")
+        self.n_pages = int(n_pages)
+        # +1 null row; under a mesh, pad the row count so the page dim
+        # divides the dp axes (pad rows are simply never allocated).
+        n_rows = self.n_pages + 1
+        if mesh is not None:
+            from repro.dist.partition import dp_size
+            d = dp_size(mesh)
+            n_rows = math.ceil(n_rows / d) * d
+        self.n_rows = n_rows
+        self.null_page = self.n_rows - 1   # by convention: the last row
+        self.dtype = cache_dtype(policy)
+        qa = QArith(policy)
+        cache = R.make_cache(qa, params, cfg, {}, batch_size=self.n_slots,
+                             max_len=self.max_len, dtype=self.dtype,
+                             page_size=self.page_size, n_rows=self.n_rows)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            specs = cache_specs(cache, cfg, mesh)
+            cache = jax.device_put(cache, jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval")))
+        self.cache = cache
+        self._free_slots: deque[int] = deque(range(self.n_slots))
+        # allocatable pages are [0, n_pages); rows in [n_pages, n_rows)
+        # are sharding padding + the null row, never handed out.
+        self._free_pages: deque[int] = deque(range(self.n_pages))
+        self._lane_pages: list[list[int]] = [[] for _ in range(self.n_slots)]
+        self.block_table = np.full((self.n_slots, self.max_blocks),
+                                   self.null_page, np.int32)
+
+    # -- slot bookkeeping (CachePool-compatible) ----------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    def acquire(self) -> Optional[int]:
+        """Pop a free slot id (FIFO), or ``None`` when all lanes are busy."""
+        return self._free_slots.popleft() if self._free_slots else None
+
+    def release(self, slot: int) -> None:
+        """Return a lane: its slot id and every page it holds."""
+        if slot in self._free_slots:
+            raise ValueError(f"slot {slot} released twice")
+        self._free_slots.append(slot)
+        self.free_pages(slot)
+
+    # -- page bookkeeping ---------------------------------------------------
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def n_live_pages(self) -> int:
+        return self.n_pages - len(self._free_pages)
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.n_pages * self.page_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    def ensure_blocks(self, slot: int, upto_pos: int) -> Optional[list[int]]:
+        """Map every block needed for positions ``[0, upto_pos]`` of ``slot``.
+
+        Returns the page ids *newly* pulled from the free list (possibly
+        empty), or ``None`` — with no pages taken — when the free list
+        cannot cover the need (the engine then parks or preempts).
+        """
+        need = self.blocks_for(upto_pos + 1)
+        if need > self.max_blocks:
+            raise ValueError(f"position {upto_pos} exceeds max_len "
+                             f"{self.max_len}")
+        row = self.block_table[slot]
+        missing = [b for b in range(need) if row[b] == self.null_page]
+        if len(missing) > len(self._free_pages):
+            return None
+        fresh = [self._free_pages.popleft() for _ in missing]
+        for b, p in zip(missing, fresh):
+            row[b] = p
+        self._lane_pages[slot].extend(fresh)
+        return fresh
+
+    def free_pages(self, slot: int) -> list[int]:
+        """Return all of ``slot``'s pages to the free list; clears its row."""
+        pages = self._lane_pages[slot]
+        self._lane_pages[slot] = []
+        self._free_pages.extend(pages)
+        self.block_table[slot] = self.null_page
+        return pages
+
+    def check_invariants(self) -> None:
+        """Alloc/free invariants (test hook): every allocatable page is
+        either free or owned by exactly one lane, and the block table
+        maps exactly the owned pages."""
+        free = list(self._free_pages)
+        owned = [p for pages in self._lane_pages for p in pages]
+        assert len(set(free)) == len(free), "duplicate free page"
+        assert len(set(owned)) == len(owned), "page owned twice"
+        assert not set(free) & set(owned), "page both free and owned"
+        assert sorted(free + owned) == list(range(self.n_pages)), \
+            "page leaked or invented"
+        mapped = [int(p) for p in self.block_table.ravel()
+                  if p != self.null_page]
+        assert sorted(mapped) == sorted(owned), "table/ownership mismatch"
+        assert (self.block_table <= self.null_page).all() and \
+               (self.block_table >= 0).all()
+
+    def nbytes(self) -> int:
+        """Total pool bytes (global, before sharding divides them)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.cache))

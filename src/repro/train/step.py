@@ -257,7 +257,8 @@ def make_eval_step(cfg, policy: PrecisionPolicy, *, attn_chunk: int = 1024):
     return eval_step
 
 
-def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False):
+def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False,
+                    paged: bool = False, chunk: int = 1):
     """Slot-indexed decode step:
     ``(params, cache, token, pos[, active, reset]) → (next_token, new_cache)``.
 
@@ -292,6 +293,23 @@ def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False):
     against the KV pool runs as the fused Pallas decode kernel (one
     launch per lane, parked lanes skipped in-kernel) — token-for-token
     parity with the generic path (tests/test_serve.py::TestFusedDecode).
+
+    ``paged=True`` expects full-context attention caches in the paged
+    layout (see :func:`repro.models.transformer.init_cache`) and two
+    extra keyword inputs: ``block_table`` ((N, n_blocks) i32, logical
+    block → physical page row) and ``page_reset`` ((R,) bool, physical
+    pages recycled *this* step — freed pages' position rows go to −1
+    in-graph, the page analogue of the ``reset`` slot mask).
+
+    ``chunk=C > 1`` compiles the *chunked-prefill* variant: ``token`` is
+    (N, C) and an extra ``n_tok`` ((N,) i32) says how many of each lane's
+    C tokens are real this step (1 for steady-state decode lanes, up to C
+    for prefilling lanes; padding tokens run at position −1 → writes
+    dropped, rows discarded). The returned token is the model output of
+    each lane's *last real* token, so a chunk step is token-for-token
+    identical to feeding the same tokens over C single-token steps.
+    Chunked prefill requires an attention-only stack (recurrent state
+    advances strictly one token per step).
     """
     # deferred: repro.serve.engine imports this module (serve sits above
     # train in the layering), so the helper import can't run at load time
@@ -299,22 +317,48 @@ def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False):
     from repro.serve import cache as SC
 
     qa = QArith(policy)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
 
     def serve_step(params, cache, token, pos, active=None, reset=None,
-                   mrope_positions=None):
+                   mrope_positions=None, block_table=None, page_reset=None,
+                   n_tok=None):
         with dispatch.fused_decode(fused_decode):
             return _body(params, cache, token, pos, active, reset,
-                         mrope_positions)
+                         mrope_positions, block_table, page_reset, n_tok)
 
-    def _body(params, cache, token, pos, active, reset, mrope_positions):
+    def _body(params, cache, token, pos, active, reset, mrope_positions,
+              block_table, page_reset, n_tok):
         wc = compute_params(params, policy)
         if reset is not None:
             cache = SC.reset_slots(cache, reset)
-        if active is not None:
-            pos = jnp.where(active, pos, -1)   # parked ⇒ KV write dropped
-        logits, new_cache = R.decode(qa, wc, cfg, token, cache, pos,
-                                     mrope_positions=mrope_positions)
-        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        if paged and page_reset is not None:
+            cache = SC.reset_pages(cache, page_reset)
+        if chunk == 1:
+            if active is not None:
+                pos = jnp.where(active, pos, -1)  # parked ⇒ KV write dropped
+            cache_pos = pos
+            last = None
+        else:
+            # per-token positions for the chunk; tokens past a lane's
+            # n_tok (and whole parked lanes) run at −1: KV writes
+            # dropped, attention rows discarded below.
+            offs = jnp.arange(chunk, dtype=jnp.int32)
+            tpos = pos[:, None] + offs[None, :]
+            valid = offs[None, :] < n_tok[:, None]
+            if active is not None:
+                valid &= active[:, None]
+            cache_pos = jnp.where(valid, tpos, -1)
+            last = jnp.clip(n_tok - 1, 0, chunk - 1)
+        logits, new_cache = R.decode(qa, wc, cfg, token, cache, cache_pos,
+                                     mrope_positions=mrope_positions,
+                                     block_table=block_table)
+        if last is None:
+            out_logits = logits[:, -1, :]
+        else:
+            out_logits = jnp.take_along_axis(
+                logits, last[:, None, None], axis=1)[:, 0, :]
+        next_token = jnp.argmax(out_logits, axis=-1).astype(jnp.int32)
         if active is not None:
             new_cache = SC.keep_active(active, new_cache, cache)
             next_token = jnp.where(active, next_token, -1)

@@ -4,10 +4,14 @@ The parity contract: under nearest rounding, N staggered requests pushed
 through the engine produce token-for-token the same continuations as
 lock-step :func:`repro.serve.decode.generate` run per request group with
 the cache pinned to the pool length (equal cache shapes ⇒ identical
-reduction order ⇒ bitwise-equal logits ⇒ identical argmax).
+reduction order ⇒ bitwise-equal logits ⇒ identical argmax). The paged
+engine inherits the contract through the block-table view (token at
+logical position p sits at gathered index p), and chunked prefill
+through per-row causal masks over the same cache axis — both are
+asserted here, through page recycling, preemption and the fused kernel.
 
-The 4×2-mesh case decodes with the KV pool sharded over (data, model)
-and runs only under ``-m dist`` (8 in-process virtual devices).
+The 4×2-mesh cases decode with the KV pool sharded over (data, model)
+and run only under ``-m dist`` (8 in-process virtual devices).
 """
 import jax
 import jax.numpy as jnp
@@ -18,8 +22,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import get_policy
 from repro.dist import partition as PT
 from repro.models import registry as R
-from repro.serve import CachePool, Engine, generate
-from repro.serve.cache import cache_dtype, keep_active, reset_slots, slot_count
+from repro.serve import CachePool, Engine, PagedCachePool, generate
+from repro.serve.cache import (cache_dtype, keep_active, reset_pages,
+                               reset_slots, slot_count)
 
 NEAREST = get_policy("bf16_standard")
 
@@ -89,6 +94,52 @@ class TestSlotPrimitives:
 
     def test_slot_count_reads_stacked_axis(self):
         assert slot_count(self.CACHE) == 4
+
+    PAGED_CACHE = {
+        "layers": {"b0": {"k_pages": jnp.ones((3, 5, 2, 4, 2), jnp.bfloat16),
+                          "v_pages": jnp.ones((3, 5, 2, 4, 2), jnp.bfloat16),
+                          "pos_pages": jnp.zeros((3, 5, 2), jnp.int32)}},
+        "rem": {"b0": {"conv": jnp.ones((4, 3, 6), jnp.bfloat16),
+                       "h": jnp.ones((4, 6), jnp.float32)}},
+    }
+
+    def test_slot_helpers_skip_paged_leaves(self):
+        """Paged leaves are page-indexed: the (N,) slot mask must never
+        broadcast against them, and slot_count must not read their row
+        extent (5 rows ≠ 4 slots here)."""
+        reset = jnp.asarray([True, False, False, True])
+        out = reset_slots(self.PAGED_CACHE, reset)
+        assert int(out["layers"]["b0"]["pos_pages"].min()) == 0  # untouched
+        assert float(jnp.abs(out["rem"]["b0"]["h"][0]).max()) == 0
+        new = jax.tree_util.tree_map(lambda x: x + 1, self.PAGED_CACHE)
+        kept = keep_active(jnp.asarray([True, False, True, False]),
+                           new, self.PAGED_CACHE)
+        assert float(kept["layers"]["b0"]["k_pages"].min()) == 2
+        assert slot_count(self.PAGED_CACHE) == 4     # from conv, not pages
+        with pytest.raises(ValueError):
+            slot_count({"layers": {"b0": self.PAGED_CACHE["layers"]["b0"]}})
+
+    def test_reset_pages_kills_position_rows_only(self):
+        mask = jnp.asarray([True, False, False, False, True])
+        out = reset_pages(self.PAGED_CACHE, mask)
+        pp = out["layers"]["b0"]["pos_pages"]        # page dim at index 1
+        assert int(pp[:, 0].max()) == -1 and int(pp[:, 4].max()) == -1
+        assert int(pp[:, 1].min()) == 0
+        assert float(out["layers"]["b0"]["k_pages"].min()) == 1  # values stay
+        assert float(out["rem"]["b0"]["conv"].min()) == 1        # slots stay
+
+    def test_serve_input_specs_paged_and_chunked(self):
+        class M:
+            axis_names = ("data", "model")
+            shape = {"data": 4, "model": 2}
+        specs = PT.serve_input_specs(8, M(), paged=True, n_rows=28, chunk=4)
+        assert specs["block_table"] == P(("data",), None)
+        assert specs["page_reset"] == P(("data",))   # 28 % 4 == 0
+        assert specs["n_tok"] == P(("data",))
+        # non-divisible row count replicates the page mask only
+        specs = PT.serve_input_specs(8, M(), paged=True, n_rows=27)
+        assert specs["page_reset"] == P(None)
+        assert specs["token"] == P(("data",), None)
 
     def test_serve_input_specs_slot_axis(self):
         class M:
@@ -289,6 +340,230 @@ class TestFusedDecode:
                 eng.submit(p, 6)
             outs.append({c.rid: c.tokens.tolist() for c in eng.run()})
         assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Paged pool bookkeeping (no model compile)
+# ---------------------------------------------------------------------------
+
+class TestPagedPool:
+    def _pool(self, **kw):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        kw.setdefault("n_slots", 3)
+        kw.setdefault("max_len", 32)
+        kw.setdefault("page_size", 8)
+        return PagedCachePool(params, cfg, NEAREST, **kw)
+
+    def test_alloc_free_invariants(self):
+        pool = self._pool()                        # 3 slots × 4 blocks
+        assert pool.n_pages == 12 and pool.null_page == pool.n_rows - 1
+        s = pool.acquire()
+        fresh = pool.ensure_blocks(s, 17)          # positions 0..17 → 3 pages
+        assert len(fresh) == 3 and pool.n_live_pages == 3
+        assert pool.ensure_blocks(s, 17) == []     # already covered
+        pool.check_invariants()
+        # pages are disjoint across lanes
+        s2 = pool.acquire()
+        fresh2 = pool.ensure_blocks(s2, 31)
+        assert len(fresh2) == 4 and not set(fresh) & set(fresh2)
+        pool.check_invariants()
+        # release returns every page — nothing leaks
+        pool.release(s)
+        assert pool.n_live_pages == 4
+        assert (pool.block_table[s] == pool.null_page).all()
+        pool.release(s2)
+        assert pool.n_live_pages == 0 and pool.n_free_pages == pool.n_pages
+        pool.check_invariants()
+
+    def test_exhaustion_takes_nothing(self):
+        pool = self._pool(n_pages=5)
+        a, b = pool.acquire(), pool.acquire()
+        assert pool.ensure_blocks(a, 31) is not None    # 4 of 5 pages
+        before = pool.n_free_pages
+        assert pool.ensure_blocks(b, 15) is None        # needs 2, has 1
+        assert pool.n_free_pages == before              # all-or-nothing
+        pool.check_invariants()
+
+    def test_pool_validation_and_capacity(self):
+        with pytest.raises(ValueError):
+            self._pool(n_pages=3)                  # < blocks per sequence
+        pool = self._pool(n_pages=6)
+        assert pool.capacity_tokens == 48
+        assert pool.max_blocks == 4
+
+    def test_paged_nbytes_scale_with_pages_not_slots(self):
+        """Equal token budget ⇒ equal KV bytes; fewer pages ⇒ fewer bytes
+        even with more slots (the memory win paging exists for)."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        contig = CachePool(params, cfg, NEAREST, n_slots=3, max_len=32)
+        full = self._pool()                        # same 96-token budget
+        half = self._pool(n_slots=6, n_pages=6)    # 2× slots, half the pages
+        kv = lambda c: sum(l.size * l.dtype.itemsize for l in
+                           jax.tree_util.tree_leaves(c)
+                           if l.dtype != jnp.int32)
+        # paged pool carries one extra (null) page per layer
+        per_page = kv(full.cache) / (full.n_rows)
+        assert abs(kv(full.cache) - kv(contig.cache)) <= per_page * 2
+        assert kv(half.cache) < kv(full.cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged engine parity (token-for-token vs generate, page recycling)
+# ---------------------------------------------------------------------------
+
+class TestPagedEngine:
+    def test_paged_engine_matches_generate(self):
+        """Paged engine ≡ lock-step generate through admission, page
+        alloc as sequences grow, eviction and page recycling (8 requests
+        over 3 slots — every slot and most pages are reused)."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(10)
+        eng = Engine(params, cfg, NEAREST, n_slots=3, max_len=24,
+                     paged=True, page_size=8)
+        sizes, gens = (5, 7, 5, 7, 5, 7, 5, 7), (8, 6, 8, 6, 8, 6, 8, 6)
+        for p, g in zip(_prompts(rng, sizes, cfg.vocab), gens):
+            eng.submit(p, g)
+        done = eng.run()
+        assert len(done) == 8 and not eng.has_work()
+        _parity(done, params, cfg, NEAREST, cache_len=24)
+        eng.pool.check_invariants()
+        assert eng.pool.n_live_pages == 0          # drained ⇒ no leak
+
+    def test_preemption_under_page_pressure(self):
+        """An undersubscribed pool forces mid-flight preemption; greedy
+        determinism means the preempted request still finishes with the
+        exact reference tokens, and no page is double-assigned."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(11)
+        eng = Engine(params, cfg, NEAREST, n_slots=4, max_len=32,
+                     paged=True, page_size=8, n_pages=6)  # 48 of 128 tokens
+        sizes, gens = (5, 9, 3, 12, 7), (6, 4, 8, 5, 6)
+        for p, g in zip(_prompts(rng, sizes, cfg.vocab), gens):
+            eng.submit(p, g)
+        done = eng.run()
+        assert len(done) == 5
+        assert eng.stats.preemptions >= 1
+        _parity(done, params, cfg, NEAREST, cache_len=32)
+        eng.pool.check_invariants()
+        assert eng.pool.n_live_pages == 0
+
+    def test_paged_fused_matches_plain_paged(self):
+        """Fused paged Pallas kernel ≡ generic gathered path on the same
+        step schedule (covers parked lanes + null-page masking)."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(12)
+        prompts = _prompts(rng, (4, 6, 5, 7), cfg.vocab)
+        outs = []
+        for fused in (False, True):
+            eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=24,
+                         paged=True, page_size=8, fused_decode=fused)
+            for p in prompts:
+                eng.submit(p, 6)
+            outs.append({c.rid: c.tokens.tolist() for c in eng.run()})
+        assert outs[0] == outs[1]
+
+    def test_utilization_reports_live_tokens(self):
+        """A short sequence alone in a big pool must report *token*
+        utilization (~its length / capacity), not lane occupancy."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        eng = Engine(params, cfg, NEAREST, n_slots=4, max_len=64,
+                     paged=True, page_size=8)
+        eng.submit(np.arange(1, 6, dtype=np.int32), 4)   # ≤ 9 live tokens
+        eng.run()
+        assert eng.stats.kv_capacity_tokens == 4 * 64
+        assert 0 < eng.stats.utilization < 9 / 256 + 1e-9
+        assert eng.stats.lane_occupancy <= 0.25
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill parity
+# ---------------------------------------------------------------------------
+
+class TestChunkedPrefill:
+    def test_chunked_prefill_matches_generate(self):
+        """Prompts longer than one chunk, fed C at a time interleaved
+        with decodes, still match generate token-for-token — contiguous
+        and paged."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(13)
+        sizes, gens = (13, 5, 17, 9, 13, 5), (6, 8, 4, 6, 6, 8)
+        prompts = _prompts(rng, sizes, cfg.vocab)
+        for paged in (False, True):
+            eng = Engine(params, cfg, NEAREST, n_slots=3, max_len=24,
+                         paged=paged, page_size=8, prefill_chunk=4)
+            for p, g in zip(prompts, gens):
+                eng.submit(p, g)
+            done = eng.run()
+            assert len(done) == 6
+            _parity(done, params, cfg, NEAREST, cache_len=24)
+
+    def test_chunking_cuts_prefill_steps(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(14)
+        prompts = _prompts(rng, (16, 16), cfg.vocab)
+        steps = {}
+        for chunk in (1, 8):
+            eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=24,
+                         paged=True, page_size=8, prefill_chunk=chunk)
+            for p in prompts:
+                eng.submit(p, 4)
+            done = eng.run()
+            assert len(done) == 2
+            steps[chunk] = eng.stats.steps
+        # 16-token prompt: 16 prefill steps unchunked vs 2 chunked
+        assert steps[8] < steps[1] - 8
+
+    def test_chunked_prefill_rejects_recurrent_stacks(self):
+        cfg = _cfg("recurrentgemma-2b")
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        with pytest.raises(ValueError, match="attention-only"):
+            Engine(params, cfg, NEAREST, n_slots=2, max_len=16,
+                   prefill_chunk=4)
+
+
+@pytest.mark.dist
+class TestShardedPagedEngine:
+    def test_mesh_4x2_paged_fused_parity(self, eight_virtual_devices):
+        """Paged engine + fused decode kernel on a 4 data × 2 model mesh:
+        page pool sharded over (data → page rows, model → head dim),
+        tokens identical to single-device generate."""
+        from jax.sharding import NamedSharding
+
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(15)
+        sizes = (5, 7, 5, 7, 5, 7, 5, 7, 5, 7)
+        gens = (6, 8, 6, 8, 6, 8, 6, 8, 6, 8)
+        prompts = _prompts(rng, sizes, cfg.vocab)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        pspecs = PT.param_specs(params, cfg, mesh)
+        params8 = jax.device_put(params, jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval")))
+        eng = Engine(params8, cfg, NEAREST, n_slots=8, max_len=24,
+                     mesh=mesh, paged=True, page_size=8, fused_decode=True,
+                     prefill_chunk=4)
+        assert eng.pool.n_rows % 4 == 0            # padded for the dp axes
+        kp = eng.pool.cache["layers"]["b0"]["k_pages"]
+        assert kp.sharding.spec[1] == ("data",)    # page rows on data
+        assert "model" in jax.tree_util.tree_flatten(
+            tuple(kp.sharding.spec))[0]            # head dim on model
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        done = eng.run()
+        assert len(done) == 10
+        _parity(done, params, cfg, NEAREST, cache_len=24)
+        eng.pool.check_invariants()
+        assert eng.pool.n_live_pages == 0
 
 
 @pytest.mark.dist
