@@ -317,7 +317,10 @@ def serve_input_specs(n_slots: int, mesh, *, paged: bool = False,
     paged pool's *page-row* dim (``n_rows`` is padded to a multiple of
     the dp size by :class:`repro.serve.paged.PagedCachePool`, matching
     ``cache_specs``' divisibility rule on the page dim). ``chunk > 1``
-    adds ``n_tok (N,) i32`` (real tokens per lane this step).
+    adds ``n_tok (N,) i32`` (real tokens per lane this step). The paged
+    copy-on-write row lists ``copy_dst``/``copy_src`` ((K,) i32) are
+    *replicated*: every shard applies the same row copies to its slice
+    of the page pool (rows are whole along the non-page dims).
     """
     dp = dp_axes(mesh)
     n = dp_size(mesh)
@@ -329,6 +332,8 @@ def serve_input_specs(n_slots: int, mesh, *, paged: bool = False,
             else None
         specs["block_table"] = P(slot, None)
         specs["page_reset"] = P(page)
+        specs["copy_dst"] = P(None)
+        specs["copy_src"] = P(None)
     if chunk > 1:
         specs["n_tok"] = P(slot)
     return specs

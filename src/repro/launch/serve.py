@@ -15,6 +15,14 @@ byte on mixed-length traffic, bounded TTFT on long prompts):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --paged --page-size 16 --slots 16 --n-pages 24 --prefill-chunk 8
 
+Stochastic sampling (deterministic per (seed, rid); greedy is the
+default and stays bitwise-parity with ``generate``). With ``--paged``
+the prompt-prefix cache is on by default (``--no-prefix-cache`` to
+disable):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --paged --temperature 0.8 --top-k 40 --top-p 0.95 --sample-seed 7
+
 On a mesh (8 virtual devices: 4 data × 2 model, KV pool sharded on both):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -89,6 +97,21 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens admitted per engine iteration "
                          "(>1 = chunked prefill, interleaved with decode)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every request "
+                         "(0 = greedy, the bitwise-parity path)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k largest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed; each token's key is "
+                         "fold_in(fold_in(seed, rid), position), so runs "
+                         "and preemption-recomputes are reproducible")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prompt-prefix page sharing (with "
+                         "--paged it is on by default for attention-only "
+                         "full-context stacks)")
     args = ap.parse_args()
 
     policy = get_policy(args.policy)
@@ -105,7 +128,8 @@ def main():
                     max_len=args.max_len, mesh=mesh, eos_id=args.eos_id,
                     fused_decode=args.fused_decode, paged=args.paged,
                     page_size=args.page_size, n_pages=args.n_pages,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    prefix_cache=False if args.no_prefix_cache else None)
 
     rng = np.random.default_rng(args.seed)
     # every request must fit the pool: clamp generation lengths to what the
@@ -134,7 +158,10 @@ def main():
     while queued < len(stream) or engine.has_work():
         while queued < len(stream) and stream[queued][0] <= engine.stats.steps:
             arrive, prompt, gen = stream[queued]
-            arrivals[engine.submit(prompt, gen)] = arrive
+            arrivals[engine.submit(
+                prompt, gen, temperature=args.temperature,
+                top_k=args.top_k, top_p=args.top_p,
+                seed=args.sample_seed)] = arrive
             queued += 1
         if not engine.has_work():      # open-loop gap: idle until next arrival
             engine.stats.steps += 1
@@ -158,6 +185,10 @@ def main():
         print(f"[serve] pages: {engine.pool.n_pages} total, "
               f"{st.kv_pages_live} live at drain; "
               f"{st.preemptions} preemptions")
+        if engine.prefix_cache:
+            print(f"[serve] prefix cache: {st.prefix_hits} hits, "
+                  f"{st.prefix_tokens_reused} prefill tokens skipped; "
+                  f"{engine.pool.n_cached_pages} pages indexed at drain")
     if latencies:
         lat, tf = np.asarray(latencies), np.asarray(ttfts)
         print(f"[serve] latency (engine steps): p50={np.percentile(lat, 50):.0f} "

@@ -20,7 +20,31 @@ from repro.kernels import dispatch
 
 __all__ = ["dense_init", "dense", "embed_init", "rope", "mrope",
            "flash_attention", "decode_attention", "attention_init",
-           "attention_apply", "norm_init", "norm_apply"]
+           "attention_apply", "copy_page_rows", "norm_init", "norm_apply"]
+
+
+def copy_page_rows(pages, dst, src, pdim: int = 0):
+    """In-graph physical page copy: ``pages[dst[j]] = pages[src[j]]``.
+
+    The copy-on-write primitive of the prefix cache
+    (:mod:`repro.serve.paged`): before a lane's first write into a page
+    it shares with the prefix index or another lane, the engine remaps
+    that block to a private page and the serve step copies the row here
+    — K gathered rows, never the whole pool. ``dst``/``src`` are (K,)
+    i32 with a *static* K; padding entries carry ``dst = n_rows`` (out
+    of range ⇒ dropped at the scatter, the same convention as the null-
+    page write guard) and ``src = 0`` (harmlessly gathered). ``pdim``
+    is the page-row dim: 0 for a bare paged leaf, 1 under a stacked
+    layer dim (:data:`repro.dist.partition.STACKED_CACHE_ROOTS`).
+
+    Applies identically to ``k_pages``/``v_pages`` *and* ``pos_pages``:
+    the private copy must carry the source positions, or the copied KV
+    cells would mask away as empty.
+    """
+    if pdim == 0:
+        return pages.at[dst].set(pages[src], mode="drop")
+    assert pdim == 1, pdim
+    return pages.at[:, dst].set(pages[:, src], mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +413,13 @@ def attention_apply(qa: QArith, p, x, cfg, *, positions, causal=True,
       logical position p always lands at gathered-view index p, so the
       paged view is bitwise-identical to a contiguous cache of the same
       length — the parity contract survives the indirection.
+
+      Pages mapped *shared* by the prefix cache are never written
+      through this path: the engine copy-on-write-remaps a shared block
+      to a private page (:func:`copy_page_rows`, applied by the serve
+      step before decode) before any lane writes into it, so by the
+      time the scatter below runs, every written block is private. The
+      null-row guard remains the backstop for scheduler bugs.
     """
     B, S, _ = x.shape
     hd = cfg.head_dim

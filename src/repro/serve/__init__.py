@@ -1,6 +1,6 @@
 """Serving subsystem: lock-step decode + the continuous-batching engine.
 
-Three modules, mirroring the train-side split (step builder / state /
+Five modules, mirroring the train-side split (step builder / state /
 driver):
 
 * :mod:`repro.serve.decode` — the reference lock-step path:
@@ -11,34 +11,45 @@ driver):
   :class:`~repro.serve.cache.CachePool` allocates the decode cache once
   for ``n_slots`` lanes (bf16 storage with the per-policy value dtype,
   sharded over the mesh via :func:`repro.dist.cache_specs`) plus the
-  functional per-slot ``reset_slots`` / ``keep_active`` helpers the
-  slot-indexed serve step is built from.
+  functional per-slot ``reset_slots`` / ``keep_active`` / page-level
+  ``reset_pages`` / ``copy_pages`` helpers the slot-indexed serve step
+  is built from.
 * :mod:`repro.serve.paged` — the token-granular alternative:
   :class:`~repro.serve.paged.PagedCachePool` cuts the KV memory of
   full-context attention layers into fixed-size pages mapped per lane
   through a block table, so pool bytes gate on *live* tokens instead of
-  reserved ``max_len`` stripes (``Engine(paged=True)``).
+  reserved ``max_len`` stripes (``Engine(paged=True)``). Pages are
+  refcounted, and full prompt-prefix pages are published into a
+  hash-chain index so requests sharing a system prompt share physical
+  KV (copy-on-write on first divergence).
+* :mod:`repro.serve.sampling` — per-request stochastic decoding:
+  temperature / top-k / top-p filters plus the deterministic
+  ``fold_in(fold_in(seed, rid), position)`` key schedule that makes a
+  sampled request reproduce its tokens across recompute preemption.
 * :mod:`repro.serve.engine` — continuous batching:
-  :class:`~repro.serve.engine.Engine` admits requests into free slots,
-  steps every active slot through one compiled
-  :func:`repro.train.step.make_serve_step` executable (prefill and
-  decode share the slot layout, so there is exactly one executable per
-  (mesh, policy)), evicts finished sequences on EOS/max-len and refills
+  :class:`~repro.serve.engine.Engine` admits requests into free slots
+  (matching cached prompt prefixes on the way in), steps every active
+  slot through one compiled :func:`repro.train.step.make_serve_step`
+  executable (prefill and decode share the slot layout; executables are
+  built lazily per (chunk width, returns-logits)), samples or argmaxes
+  per request, evicts finished sequences on EOS/max-len and refills
   mid-flight.
 
 The engine covers every decoder-only family (dense / GQA / MoE / SSM /
 hybrid); encoder–decoder models keep the lock-step ``generate`` path
 (their decode positions drive a scalar sinusoidal embedding).
 """
-from repro.serve.cache import (CachePool, cache_dtype, keep_active,
-                               reset_pages, reset_slots)
+from repro.serve.cache import (CachePool, cache_dtype, copy_pages,
+                               keep_active, reset_pages, reset_slots)
 from repro.serve.decode import generate
 from repro.serve.engine import Completion, Engine, EngineStats, Request
 from repro.serve.paged import PagedCachePool
+from repro.serve.sampling import request_key, sample_token, validate_sampling
 
 __all__ = [
-    "CachePool", "PagedCachePool", "cache_dtype", "keep_active",
-    "reset_pages", "reset_slots",
+    "CachePool", "PagedCachePool", "cache_dtype", "copy_pages",
+    "keep_active", "reset_pages", "reset_slots",
     "generate",
     "Completion", "Engine", "EngineStats", "Request",
+    "request_key", "sample_token", "validate_sampling",
 ]

@@ -47,8 +47,8 @@ from repro.core.qarith import QArith
 from repro.dist.partition import STACKED_CACHE_ROOTS, cache_specs
 from repro.models import registry as R
 
-__all__ = ["CachePool", "PAGED_KEYS", "cache_dtype", "keep_active",
-           "reset_pages", "reset_slots", "slot_count"]
+__all__ = ["CachePool", "PAGED_KEYS", "cache_dtype", "copy_pages",
+           "keep_active", "reset_pages", "reset_slots", "slot_count"]
 
 PyTree = Any
 
@@ -159,6 +159,29 @@ def reset_pages(cache: PyTree, page_mask: jax.Array) -> PyTree:
         pdim = _slot_dim(path)     # stacked roots put the page dim at 1
         return jnp.where(_per_slot(page_mask, leaf, pdim),
                          jnp.array(-1, leaf.dtype), leaf)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def copy_pages(cache: PyTree, dst: jax.Array, src: jax.Array) -> PyTree:
+    """Copy-on-write page copies: row ``src[j]`` → row ``dst[j]`` on every
+    paged leaf (``k_pages``/``v_pages``/``pos_pages``), in-graph.
+
+    The serve step applies this *after* :func:`reset_pages` and *before*
+    the model's KV writes, so a lane whose first write lands in a block
+    it shares (with the prefix index or another lane) writes into a
+    private copy that already carries the shared content — positions
+    included. ``dst``/``src`` are (K,) i32 with static K; padding rows
+    use ``dst = n_rows`` (out of range ⇒ dropped) and ``src = 0``. Only
+    K rows are gathered — the pool is never streamed. Slot-indexed
+    leaves pass through untouched.
+    """
+    from repro.models.layers import copy_page_rows
+
+    def one(path, leaf):
+        if not _is_paged(path):
+            return leaf
+        return copy_page_rows(leaf, dst, src, _slot_dim(path))
 
     return jax.tree_util.tree_map_with_path(one, cache)
 

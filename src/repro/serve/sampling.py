@@ -1,0 +1,87 @@
+"""Per-request stochastic sampling: temperature / top-k / top-p.
+
+The engine's compiled step keeps greedy argmax in-executable (bitwise
+unchanged vs the greedy-only engine); lanes with ``temperature > 0``
+additionally receive the step's output logits and sample **host-side**
+through this module. Determinism is the whole design:
+
+* the PRNG key for a generated token is
+  ``fold_in(fold_in(PRNGKey(seed), rid), position)`` — a pure function
+  of the request's ``(seed, rid)`` identity and the *absolute position*
+  of the token being sampled. Recompute preemption throws away a lane's
+  KV and regenerates its tokens from scratch; because the logits are
+  bitwise-reproducible (the greedy parity contract) and the key depends
+  only on position, the regenerated stochastic tokens are identical to
+  the first pass — exactly the property greedy decode gets for free;
+* the draw itself is Gumbel-max over the filtered logits
+  (``argmax(logits + gumbel)`` ≡ one categorical sample), so a single
+  deterministic ``jax.random.gumbel`` call per token is the only source
+  of randomness — no global RNG state anywhere.
+
+Filter order matches the common serving convention: temperature scales
+the logits, top-k keeps the k largest, top-p (nucleus) keeps the
+smallest descending-probability prefix whose mass reaches ``top_p``
+(always at least one token). ``temperature == 0`` is greedy regardless
+of top-k/top-p.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["request_key", "sample_token", "validate_sampling"]
+
+
+def validate_sampling(temperature: float, top_k: int, top_p: float) -> None:
+    """Raise ValueError on out-of-range sampling parameters."""
+    if temperature < 0:
+        raise ValueError(f"temperature must be >= 0, got {temperature}")
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0 (0 = off), got {top_k}")
+    if not 0 < top_p <= 1:
+        raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+
+
+def request_key(seed: int, rid: int, position: int) -> jax.Array:
+    """Deterministic per-token key: fold (rid, position) into the seed.
+
+    ``position`` is the absolute index of the token being generated
+    (``len(prompt) + n_already_generated``), so a preempted-and-
+    readmitted request re-derives exactly the keys of its first pass.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+    return jax.random.fold_in(key, position)
+
+
+def sample_token(logits, *, temperature: float, top_k: int = 0,
+                 top_p: float = 1.0, key) -> int:
+    """One deterministic sample from a (vocab,) logits row.
+
+    Host-side numpy for the filters, one ``jax.random.gumbel`` draw for
+    the randomness (Gumbel-max ≡ categorical). ``temperature == 0``
+    falls back to plain argmax (the greedy path never calls this).
+    """
+    l = np.asarray(logits, np.float32).reshape(-1)
+    if temperature <= 0:
+        return int(np.argmax(l))
+    l = l / temperature
+    if top_k and top_k < l.size:
+        kth = np.partition(l, -top_k)[-top_k]
+        l = np.where(l >= kth, l, -np.inf)
+    if top_p < 1.0:
+        order = np.argsort(-l, kind="stable")
+        probs = _softmax(l[order])
+        # smallest prefix with cumulative mass >= top_p, at least 1 token
+        keep = int(np.searchsorted(np.cumsum(probs), top_p)) + 1
+        mask = np.full_like(l, -np.inf)
+        mask[order[:keep]] = 0.0
+        l = l + mask
+    g = np.asarray(jax.random.gumbel(key, l.shape, dtype=jnp.float32))
+    return int(np.argmax(l + g))
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    m = np.max(x[np.isfinite(x)]) if np.isfinite(x).any() else 0.0
+    e = np.exp(np.where(np.isfinite(x), x - m, -np.inf))
+    return e / max(e.sum(), 1e-30)

@@ -258,7 +258,8 @@ def make_eval_step(cfg, policy: PrecisionPolicy, *, attn_chunk: int = 1024):
 
 
 def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False,
-                    paged: bool = False, chunk: int = 1):
+                    paged: bool = False, chunk: int = 1,
+                    return_logits: bool = False):
     """Slot-indexed decode step:
     ``(params, cache, token, pos[, active, reset]) → (next_token, new_cache)``.
 
@@ -310,6 +311,20 @@ def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False,
     identical to feeding the same tokens over C single-token steps.
     Chunked prefill requires an attention-only stack (recurrent state
     advances strictly one token per step).
+
+    ``paged=True`` also accepts optional ``copy_dst``/``copy_src`` ((K,)
+    i32, static K): physical page-row copies applied after ``page_reset``
+    and *before* the model's KV writes — the engine's copy-on-write remap
+    for prefix-shared blocks (padding rows use ``dst = n_rows`` ⇒ dropped;
+    see :func:`repro.serve.cache.copy_pages`).
+
+    ``return_logits=True`` compiles the *sampling* variant, returning
+    ``(next_token, out_logits, new_cache)`` with ``out_logits`` the (N, V)
+    pre-softmax logits each lane's token was argmaxed from. The token
+    path is byte-identical to the default variant — greedy lanes read
+    ``next_token`` exactly as before, sampling lanes re-decide host-side
+    from the logits (:mod:`repro.serve.sampling`); the engine only ever
+    compiles this variant when a sampling request is actually in flight.
     """
     # deferred: repro.serve.engine imports this module (serve sits above
     # train in the layering), so the helper import can't run at load time
@@ -322,18 +337,21 @@ def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False,
 
     def serve_step(params, cache, token, pos, active=None, reset=None,
                    mrope_positions=None, block_table=None, page_reset=None,
-                   n_tok=None):
+                   n_tok=None, copy_dst=None, copy_src=None):
         with dispatch.fused_decode(fused_decode):
             return _body(params, cache, token, pos, active, reset,
-                         mrope_positions, block_table, page_reset, n_tok)
+                         mrope_positions, block_table, page_reset, n_tok,
+                         copy_dst, copy_src)
 
     def _body(params, cache, token, pos, active, reset, mrope_positions,
-              block_table, page_reset, n_tok):
+              block_table, page_reset, n_tok, copy_dst, copy_src):
         wc = compute_params(params, policy)
         if reset is not None:
             cache = SC.reset_slots(cache, reset)
         if paged and page_reset is not None:
             cache = SC.reset_pages(cache, page_reset)
+        if paged and copy_dst is not None:
+            cache = SC.copy_pages(cache, copy_dst, copy_src)
         if chunk == 1:
             if active is not None:
                 pos = jnp.where(active, pos, -1)  # parked ⇒ KV write dropped
@@ -362,6 +380,8 @@ def make_serve_step(cfg, policy: PrecisionPolicy, *, fused_decode=False,
         if active is not None:
             new_cache = SC.keep_active(active, new_cache, cache)
             next_token = jnp.where(active, next_token, -1)
+        if return_logits:
+            return next_token[:, None], out_logits, new_cache
         return next_token[:, None], new_cache
 
     return serve_step

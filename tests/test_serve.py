@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import get_policy
 from repro.dist import partition as PT
 from repro.models import registry as R
-from repro.serve import CachePool, Engine, PagedCachePool, generate
+from repro.serve import CachePool, Engine, PagedCachePool, generate, sampling
 from repro.serve.cache import (cache_dtype, keep_active, reset_pages,
                                reset_slots, slot_count)
 
@@ -430,7 +430,10 @@ class TestPagedEngine:
         assert len(done) == 8 and not eng.has_work()
         _parity(done, params, cfg, NEAREST, cache_len=24)
         eng.pool.check_invariants()
-        assert eng.pool.n_live_pages == 0          # drained ⇒ no leak
+        # drained ⇒ no leak: the only live pages are prefix-index holds
+        assert eng.pool.n_live_pages == eng.pool.n_cached_pages
+        eng.pool.clear_prefix()
+        assert eng.pool.n_live_pages == 0
 
     def test_preemption_under_page_pressure(self):
         """An undersubscribed pool forces mid-flight preemption; greedy
@@ -449,6 +452,8 @@ class TestPagedEngine:
         assert eng.stats.preemptions >= 1
         _parity(done, params, cfg, NEAREST, cache_len=32)
         eng.pool.check_invariants()
+        assert eng.pool.n_live_pages == eng.pool.n_cached_pages
+        eng.pool.clear_prefix()
         assert eng.pool.n_live_pages == 0
 
     def test_paged_fused_matches_plain_paged(self):
@@ -563,6 +568,8 @@ class TestShardedPagedEngine:
         assert len(done) == 10
         _parity(done, params, cfg, NEAREST, cache_len=24)
         eng.pool.check_invariants()
+        assert eng.pool.n_live_pages == eng.pool.n_cached_pages
+        eng.pool.clear_prefix()
         assert eng.pool.n_live_pages == 0
 
 
@@ -592,3 +599,351 @@ class TestShardedFusedDecode:
         done = eng.run()
         assert len(done) == 10
         _parity(done, params, cfg, NEAREST, cache_len=24)
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling (determinism, greedy coexistence, preemption)
+# ---------------------------------------------------------------------------
+
+class TestSampling:
+    def test_filters_restrict_support_to_argmax(self):
+        """top_k=1 and a vanishing top_p both collapse to the argmax
+        token no matter the gumbel draw."""
+        logits = np.asarray([0.1, 2.0, -1.0, 1.9, 0.0], np.float32)
+        for kw in ({"top_k": 1}, {"top_p": 1e-6}):
+            for trial in range(5):
+                key = sampling.request_key(0, 7, trial)
+                assert sampling.sample_token(
+                    logits, temperature=1.0, key=key, **kw) == 1
+
+    def test_sampling_deterministic_per_seed_and_rid(self):
+        """Same (seed, rid) reproduces the continuation across engine
+        instances; a different seed decodes a different one."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        prompt = np.random.default_rng(20).integers(
+            0, cfg.vocab, size=6).astype(np.int32)
+
+        def run_once(seed):
+            eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=24)
+            eng.submit(prompt, 10, rid=7, temperature=1.0, seed=seed)
+            return eng.run()[0].tokens.tolist()
+
+        assert run_once(3) == run_once(3)
+        assert run_once(3) != run_once(4)
+
+    def test_greedy_lanes_bitwise_unchanged_next_to_sampling(self):
+        """Greedy requests sharing steps with a sampling lane still match
+        generate token-for-token (the logits-returning executable keeps
+        the in-graph argmax path byte-identical)."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(21)
+        prompts = _prompts(rng, (5, 5, 5, 5), cfg.vocab)
+        eng = Engine(params, cfg, NEAREST, n_slots=4, max_len=24)
+        for i, p in enumerate(prompts[:3]):
+            eng.submit(p, 8)                        # greedy lanes
+        eng.submit(prompts[3], 8, temperature=0.9, seed=1)
+        done = eng.run()
+        assert len(done) == 4
+        greedy = [c for c in done if c.rid < 3]
+        _parity(greedy, params, cfg, NEAREST, cache_len=24)
+
+    def test_temperature_zero_is_greedy(self):
+        """temperature=0 (whatever top-k/top-p say) takes the greedy
+        path exactly."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        prompt = np.random.default_rng(22).integers(
+            0, cfg.vocab, size=5).astype(np.int32)
+        outs = []
+        for kw in ({}, {"temperature": 0.0, "top_k": 5, "top_p": 0.5}):
+            eng = Engine(params, cfg, NEAREST, n_slots=1, max_len=16)
+            eng.submit(prompt, 8, **kw)
+            outs.append(eng.run()[0].tokens.tolist())
+        assert outs[0] == outs[1]
+
+    def test_sampling_survives_recompute_preemption(self):
+        """A sampled request preempted for pages regenerates the exact
+        same tokens: logits are bitwise reproducible and the PRNG key is
+        a pure function of (seed, rid, position)."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(23)
+        prompts = _prompts(rng, (5, 9, 3, 12, 7), cfg.vocab)
+        gens = (6, 4, 8, 5, 6)
+        outs = {}
+        for tag, n_pages in (("tight", 6), ("roomy", None)):
+            eng = Engine(params, cfg, NEAREST, n_slots=4, max_len=32,
+                         paged=True, page_size=8, n_pages=n_pages)
+            for i, (p, g) in enumerate(zip(prompts, gens)):
+                eng.submit(p, g, rid=i, temperature=0.8, top_k=20, seed=5)
+            done = eng.run()
+            assert len(done) == 5
+            if tag == "tight":
+                assert eng.stats.preemptions >= 1
+            outs[tag] = {c.rid: c.tokens.tolist() for c in done}
+        assert outs["tight"] == outs["roomy"]
+
+    def test_submit_validates_sampling_params(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        eng = Engine(params, cfg, NEAREST, n_slots=1, max_len=16)
+        prompt = np.arange(1, 5, dtype=np.int32)
+        for kw in ({"temperature": -0.1}, {"top_k": -1},
+                   {"top_p": 0.0}, {"top_p": 1.5}):
+            with pytest.raises(ValueError):
+                eng.submit(prompt, 4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache (hash-chain sharing, copy-on-write, eviction)
+# ---------------------------------------------------------------------------
+
+class TestPrefixCache:
+    def _pool(self, **kw):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        kw.setdefault("n_slots", 3)
+        kw.setdefault("max_len", 32)
+        kw.setdefault("page_size", 8)
+        return PagedCachePool(params, cfg, NEAREST, **kw)
+
+    def test_refcounted_sharing_and_cow_bookkeeping(self):
+        """publish → match → adopt shares physical pages across holders;
+        a write into a shared block CoW-remaps only the written block."""
+        pool = self._pool()
+        prompt = np.arange(100, 116, dtype=np.int32)   # 2 full blocks
+        a = pool.acquire()
+        assert len(pool.ensure_blocks(a, 15)) == 2
+        assert pool.publish_prefix(a, prompt) == 2
+        assert pool.n_cached_pages == 2
+        pool.check_invariants()
+        matched = pool.match_prefix(prompt)
+        assert len(matched) == 2
+        assert pool.match_prefix(prompt[:8]).__len__() == 1  # shorter prefix
+        assert pool.match_prefix(prompt[::-1]) == []         # different tokens
+        b = pool.acquire()
+        pool.adopt_prefix(b, matched)
+        assert pool.block_table[b][0] == pool.block_table[a][0]
+        pool.check_invariants()
+        pool.release(a)                     # index + lane b keep the pages
+        assert pool.n_live_pages == 2
+        # b writes position 15 → shared block 1 CoW-remaps, block 0 stays
+        fresh, copies = pool.prepare_write(b, 15, 1)
+        assert fresh == [] and len(copies) == 1
+        dst, src = copies[0]
+        assert src == matched[1] and pool.block_table[b][1] == dst
+        assert pool.block_table[b][0] == matched[0]     # still shared
+        pool.check_invariants()
+        pool.release(b)
+        assert pool.n_live_pages == pool.n_cached_pages == 2
+        assert pool.clear_prefix() == 2
+        assert pool.n_live_pages == 0
+        pool.check_invariants()
+
+    def test_lru_reclaim_frees_cached_pages_under_pressure(self):
+        """Index-only pages are reclaimed (oldest first) when the free
+        list cannot cover an allocation — cached prefixes never starve
+        live lanes."""
+        pool = self._pool(n_slots=2, max_len=32, n_pages=4)
+        a = pool.acquire()
+        pool.ensure_blocks(a, 15)
+        pool.publish_prefix(a, np.arange(16, dtype=np.int32))
+        pool.release(a)
+        assert pool.n_free_pages == 2 and pool.n_reclaimable() == 2
+        b = pool.acquire()
+        fresh = pool.ensure_blocks(b, 31)   # needs all 4 pages
+        assert fresh is not None and len(fresh) == 4
+        assert pool.n_cached_pages == 0     # cache evicted to make room
+        pool.check_invariants()
+
+    def test_shared_prompt_skips_prefill_and_keeps_greedy_tokens(self):
+        """Second request with the same system prompt skips the cached
+        blocks' prefill steps and still decodes the exact greedy tokens."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(30)
+        system = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+        tails = _prompts(rng, (4, 4), cfg.vocab)
+        prompts = [np.concatenate([system, t]) for t in tails]
+        outs = {}
+        steps = {}
+        for on in (True, False):
+            eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=32,
+                         paged=True, page_size=8, prefix_cache=on)
+            assert eng.prefix_cache is on
+            eng.submit(prompts[0], 6)
+            eng.run()                       # drain: prefix now published
+            eng.submit(prompts[1], 6)
+            before = eng.stats.prefill_slot_steps
+            done = eng.run()
+            outs[on] = {c.rid: c.tokens.tolist() for c in done}
+            steps[on] = eng.stats.prefill_slot_steps - before
+            if on:
+                assert eng.stats.prefix_hits == 1
+                assert eng.stats.prefix_tokens_reused == 16
+                eng.pool.check_invariants()
+        # 16 of 20 prompt tokens came from the cache
+        assert steps[True] == steps[False] - 16
+        assert outs[True] == outs[False]
+
+    def test_full_prompt_match_refeeds_last_token_via_cow(self):
+        """An identical prompt (whole prompt in full blocks) re-feeds
+        only its last token — the write CoW-remaps the shared final
+        block — and reproduces the greedy continuation."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        prompt = np.random.default_rng(31).integers(
+            0, cfg.vocab, size=16).astype(np.int32)   # 2 full blocks
+        eng = Engine(params, cfg, NEAREST, n_slots=1, max_len=32,
+                     paged=True, page_size=8)
+        eng.submit(prompt, 6)
+        first = eng.run()[0]
+        eng.submit(prompt, 6)
+        before = eng.stats.prefill_slot_steps
+        again = eng.run()[0]
+        assert eng.stats.prefix_hits == 1
+        assert eng.stats.prefix_tokens_reused == 15   # all but the last token
+        assert eng.stats.prefill_slot_steps == before  # no prefill steps left
+        assert again.tokens.tolist() == first.tokens.tolist()
+        eng.pool.check_invariants()
+
+    def test_prefix_cache_gating(self):
+        cfg = _cfg("recurrentgemma-2b")     # ring-window + recurrent state
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        atn = _cfg()
+        params_atn = R.init(atn, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        with pytest.raises(ValueError, match="paged"):
+            Engine(params_atn, atn, NEAREST, n_slots=2, max_len=16,
+                   prefix_cache=True)
+        with pytest.raises(ValueError):
+            Engine(params, cfg, NEAREST, n_slots=2, max_len=16,
+                   paged=True, prefix_cache=True)
+        eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=16, paged=True)
+        assert eng.prefix_cache is False    # auto-off on ineligible stacks
+
+
+# ---------------------------------------------------------------------------
+# Engine accounting fixes (live-KV, TTFT across preemption, run, rids)
+# ---------------------------------------------------------------------------
+
+class TestEngineAccounting:
+    def test_parked_lanes_count_in_live_kv(self):
+        """A lane parked for pages still holds its KV — live-token stats
+        must include it (they are exactly the tokens pinning the pool)."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(40)
+        eng = Engine(params, cfg, NEAREST, n_slots=2, max_len=12,
+                     paged=True, page_size=4, n_pages=3, prefix_cache=False)
+        eng.submit(rng.integers(0, cfg.vocab, 4).astype(np.int32), 4)
+        eng.submit(rng.integers(0, cfg.vocab, 4).astype(np.int32), 8)
+        parked_seen = False
+        while eng.has_work():
+            fed_before = {i: s.fed for i, s in enumerate(eng._slots) if s}
+            eng.step()
+            eng.pool.check_invariants()
+            live = sum(s.fed for s in eng._slots if s is not None)
+            assert eng.stats.kv_tokens_live == live
+            for i, s in enumerate(eng._slots):
+                if s is not None and fed_before.get(i) == s.fed:
+                    parked_seen = True     # occupied lane fed nothing
+        assert parked_seen
+        assert eng.stats.finished == 2
+
+    def test_ttft_and_admitted_span_preemption(self):
+        """Preempted requests keep their original admitted/first-token
+        steps, and ``admitted`` counts requests — not admission events."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(41)
+        eng = Engine(params, cfg, NEAREST, n_slots=4, max_len=32,
+                     paged=True, page_size=8, n_pages=6)
+        for p, g in zip(_prompts(rng, (5, 9, 3, 12, 7), cfg.vocab),
+                        (6, 4, 8, 5, 6)):
+            eng.submit(p, g)
+        first_admit: dict = {}
+        first_tok: dict = {}
+        done = []
+        while eng.has_work():
+            done.extend(eng.step())
+            for s in eng._slots:
+                if s is None:
+                    continue
+                first_admit.setdefault(s.rid, s.admitted_step)
+                if s.generated and s.rid not in first_tok:
+                    first_tok[s.rid] = eng.stats.steps
+        assert eng.stats.preemptions >= 1
+        assert eng.stats.admitted == 5      # once per request, not per admit
+        for c in done:
+            assert c.admitted_step == first_admit[c.rid]
+            assert c.first_token_step == first_tok[c.rid]
+
+    def test_run_max_steps_is_relative_to_the_call(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        eng = Engine(params, cfg, NEAREST, n_slots=1, max_len=32)
+        eng.submit(np.arange(1, 6, dtype=np.int32), 20)
+        eng.run(max_steps=3)
+        assert eng.stats.steps == 3 and eng.has_work()
+        eng.run(max_steps=3)                # must make progress, not no-op
+        assert eng.stats.steps == 6
+        done = eng.run()
+        assert len(done) == 1 and not eng.has_work()
+
+    def test_rid_collision_rejected_while_pending_or_in_flight(self):
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        eng = Engine(params, cfg, NEAREST, n_slots=1, max_len=16)
+        prompt = np.arange(1, 5, dtype=np.int32)
+        eng.submit(prompt, 4, rid=5)
+        with pytest.raises(ValueError, match="rid 5"):
+            eng.submit(prompt, 4, rid=5)    # collides while pending
+        eng.step()                          # admitted into a slot
+        with pytest.raises(ValueError, match="rid 5"):
+            eng.submit(prompt, 4, rid=5)    # collides while in flight
+        eng.run()
+        assert eng.submit(prompt, 4, rid=5) == 5   # finished: rid reusable
+        eng.run()
+
+
+# ---------------------------------------------------------------------------
+# Preemption storm (invariants every step, refcounts drain)
+# ---------------------------------------------------------------------------
+
+class TestPreemptionStorm:
+    def test_storm_holds_invariants_every_step(self):
+        """Tiny page pool + long prompts: repeated preemption, parking
+        and prefix sharing, with pool invariants checked after every
+        single engine step and refcounts draining to zero at the end."""
+        cfg = _cfg()
+        params = R.init(cfg, jax.random.PRNGKey(0), NEAREST.param_dtype)
+        rng = np.random.default_rng(42)
+        eng = Engine(params, cfg, NEAREST, n_slots=4, max_len=24,
+                     paged=True, page_size=4, n_pages=10, prefill_chunk=4)
+        sizes, gens = (12, 10, 14, 9, 11, 13), (6, 8, 5, 7, 6, 5)
+        for i, (p, g) in enumerate(zip(_prompts(rng, sizes, cfg.vocab),
+                                       gens)):
+            # mix greedy and sampled lanes through the same storm
+            kw = {"temperature": 0.7, "seed": 9} if i % 3 == 2 else {}
+            eng.submit(p, g, **kw)
+        done = []
+        while eng.has_work():
+            done.extend(eng.step())
+            eng.pool.check_invariants()
+            live = sum(s.fed for s in eng._slots if s is not None)
+            assert eng.stats.kv_tokens_live == live
+        assert len(done) == 6
+        assert eng.stats.preemptions >= 1
+        assert eng.stats.admitted == 6
+        for c in done:                      # TTFT ordering sane throughout
+            assert c.admitted_step <= c.first_token_step <= c.finished_step
+        _parity([c for i, c in enumerate(sorted(done, key=lambda c: c.rid))
+                 if c.rid % 3 != 2], params, cfg, NEAREST, cache_len=24)
+        # refcounts drain: only index holds survive, then nothing
+        assert eng.pool.n_live_pages == eng.pool.n_cached_pages
+        eng.pool.clear_prefix()
+        assert eng.pool.n_live_pages == 0
+        assert int(eng.pool._ref.sum()) == 0
+        eng.pool.check_invariants()
